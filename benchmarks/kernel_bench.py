@@ -1,0 +1,90 @@
+"""Kernel-layer benchmark: jnp-oracle wall time on CPU (the Pallas kernels
+are TPU-target; interpret mode is a correctness harness, not a timing
+one) + allclose deltas vs the kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict]:
+    from repro.kernels.decode_attention import (decode_attention,
+                                                decode_attention_ref)
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+    from repro.kernels.grpo_logprob import grpo_logprob, grpo_logprob_ref
+    from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
+    from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
+
+    key = jax.random.PRNGKey(0)
+    k = lambda i: jax.random.fold_in(key, i)
+    rows = []
+
+    B, S, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(k(1), (B, S, H, hd))
+    kv = jax.random.normal(k(2), (B, S, H, hd))
+    ref = jax.jit(lambda q, a, b: flash_attention_ref(q, a, b))
+    t = _time(ref, q, kv, kv)
+    err = float(jnp.abs(flash_attention(q, kv, kv)
+                        - flash_attention_ref(q, kv, kv)).max())
+    rows.append(dict(name="flash_attention_ref_cpu", us_per_call=t * 1e6,
+                     derived=err))
+
+    S = 4096
+    qd = jax.random.normal(k(3), (2, 1, H, hd))
+    kc = jax.random.normal(k(4), (2, S, H, hd))
+    valid = jnp.ones((2, S), bool)
+    ref = jax.jit(lambda a, b, c, v: decode_attention_ref(a, b, c, v))
+    t = _time(ref, qd, kc, kc, valid)
+    err = float(jnp.abs(decode_attention(qd, kc, kc, valid)
+                        - decode_attention_ref(qd, kc, kc, valid)).max())
+    rows.append(dict(name="decode_attention_ref_cpu", us_per_call=t * 1e6,
+                     derived=err))
+
+    a = jax.random.uniform(k(5), (2, 1024, 256), minval=0.5, maxval=0.99)
+    b = jax.random.normal(k(6), (2, 1024, 256))
+    ref = jax.jit(rglru_scan_ref)
+    t = _time(ref, a, b)
+    err = float(jnp.abs(rglru_scan(a, b) - rglru_scan_ref(a, b)).max())
+    rows.append(dict(name="rglru_scan_ref_cpu", us_per_call=t * 1e6,
+                     derived=err))
+
+    x = jax.random.normal(k(7), (1, 512, 256))
+    dt = 0.1 * jax.nn.softplus(jax.random.normal(k(8), (1, 512, 256)))
+    A = -jnp.abs(jax.random.normal(k(9), (256, 16)))
+    bb = jax.random.normal(k(10), (1, 512, 16))
+    cc = jax.random.normal(k(11), (1, 512, 16))
+    ref = jax.jit(mamba_scan_ref)
+    t = _time(ref, x, dt, A, bb, cc)
+    err = float(jnp.abs(mamba_scan(x, dt, A, bb, cc)
+                        - mamba_scan_ref(x, dt, A, bb, cc)).max())
+    rows.append(dict(name="mamba_scan_ref_cpu", us_per_call=t * 1e6,
+                     derived=err))
+
+    lg = 5 * jax.random.normal(k(12), (1024, 8192))
+    tg = jax.random.randint(k(13), (1024,), 0, 8192)
+    ref = jax.jit(grpo_logprob_ref)
+    t = _time(ref, lg, tg)
+    lp, _ = grpo_logprob(lg, tg)
+    lpr, _ = grpo_logprob_ref(lg, tg)
+    rows.append(dict(name="grpo_logprob_ref_cpu", us_per_call=t * 1e6,
+                     derived=float(jnp.abs(lp - lpr).max())))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

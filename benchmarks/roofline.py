@@ -1,0 +1,68 @@
+"""Roofline table (deliverable g): aggregates results/dryrun/*.json into
+the per-(arch x shape x mesh) three-term roofline + bottleneck report."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = ("arch", "shape", "mesh", "t_compute", "t_memory", "t_collective",
+          "bottleneck", "useful_ratio")
+
+
+def load(dirname: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    lines = ["| " + " | ".join(HEADER) + " |",
+             "|" + "---|" * len(HEADER)]
+    for r in sorted(recs, key=lambda r: (r.get("mesh", ""), r["arch"],
+                                         r["shape"])):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | skipped | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERR | | | {r.get('error', '?')[:40]} | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.3e} | {r['t_memory']:.3e} "
+            f"| {r['t_collective']:.3e} | **{r['bottleneck']}** "
+            f"| {min(r['useful_flops_ratio'], 1.0):.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    recs = load()
+    rows = []
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        if r["mesh"] != "single":
+            continue
+        dom_t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        rows.append(dict(
+            name=f"roofline_{r['arch']}_{r['shape']}",
+            us_per_call=dom_t * 1e6,
+            derived=r["bottleneck"]))
+    n_ok = len(ok)
+    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    rows.append(dict(name="dryrun_combos_ok", us_per_call=0.0, derived=n_ok))
+    rows.append(dict(name="dryrun_combos_skipped", us_per_call=0.0,
+                     derived=n_skip))
+    rows.append(dict(name="dryrun_combos_failed", us_per_call=0.0,
+                     derived=n_err))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table(load()))

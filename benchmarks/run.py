@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Mapping:
+  ablation            — Table 1 (baseline / +TransferQueue / +Async)
+  scaling             — Fig. 10 (32→1024 chips, AsyncFlow vs colocated)
+  gantt               — Fig. 11 (bubble fractions per instance)
+  stability           — Fig. 12 (async vs sync reward)
+  transfer_queue      — §3.5 (concurrency micro-benchmarks)
+  kernels             — kernel oracle timings + kernel-vs-oracle error
+  roofline            — deliverable (g): dry-run roofline summary
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation, gantt, kernel_bench, roofline, scaling,
+                            stability, transfer_queue_bench)
+
+    suites = [
+        ("ablation", ablation.run),
+        ("scaling", scaling.run),
+        ("gantt", gantt.run),
+        ("stability", stability.run),
+        ("transfer_queue", transfer_queue_bench.run),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    only = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"{row['derived']}")
+        except Exception:
+            failed += 1
+            print(f"{name},ERROR,0", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""§3.5 micro-benchmarks: TransferQueue op latency and concurrent
+read/write throughput scaling with storage units."""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+
+def run() -> list[dict]:
+    from repro.core.transfer_queue import TransferQueue
+
+    rows = []
+
+    # put/get latency (single-threaded)
+    tq = TransferQueue(capacity=4096, tasks={"t": ["x"]},
+                       num_storage_units=4)
+    idxs = tq.next_indices(4096)
+    payload = np.zeros(1024, np.float32)
+    t0 = time.perf_counter()
+    for i in idxs:
+        tq.put(i, "x", payload)
+    t_put = (time.perf_counter() - t0) / len(idxs)
+    t0 = time.perf_counter()
+    while tq.get("t", 64, timeout=0.1) is not None:
+        pass
+    t_get = (time.perf_counter() - t0) / (len(idxs) // 64)
+    rows.append(dict(name="tq_put_row", us_per_call=t_put * 1e6,
+                     derived=round(1 / t_put, 0)))
+    rows.append(dict(name="tq_get_batch64", us_per_call=t_get * 1e6,
+                     derived=round(1 / t_get, 0)))
+
+    # concurrent producer/consumer throughput vs storage-unit count
+    for units in (1, 2, 4, 8):
+        tq = TransferQueue(capacity=8192, tasks={"t": ["x"]},
+                           num_storage_units=units)
+        idxs = tq.next_indices(8192)
+        done = []
+
+        def produce(shard):
+            mine = idxs[shard::4]
+            for i in mine:
+                tq.put(i, "x", payload)
+
+        def consume():
+            n = 0
+            while True:
+                b = tq.get("t", 128, timeout=2.0, allow_partial=True)
+                if b is None:
+                    return
+                n += len(b["indices"])
+                if n >= len(idxs) // 2:
+                    done.append(n)
+                    return
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=produce, args=(s,))
+                   for s in range(4)] + \
+                  [threading.Thread(target=consume) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        dt = time.perf_counter() - t0
+        rows.append(dict(name=f"tq_concurrent_{units}units",
+                         us_per_call=dt / len(idxs) * 1e6,
+                         derived=round(len(idxs) / dt, 0)))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,0 +1,45 @@
+"""Resource planning (paper §4.3): search the best rollout/train split for
+a target cluster and compare workflow modes at scale via the simulator.
+
+  PYTHONPATH=src python examples/plan_cluster.py --chips 512 --arch qwen2_5_32b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.planner import (ClusterPlan, Workload, plan_resources,  # noqa: E402
+                                simulate)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", type=int, default=512)
+    ap.add_argument("--arch", default="qwen2_5_32b")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    w = Workload(prompts_per_step=256, group_size=8, mean_response_len=2048,
+                 num_steps=6)
+    pr = plan_resources(cfg, args.chips, w, mode="separated_async")
+    p = pr.plan
+    print(f"cluster: {args.chips} chips, model: {cfg.name} "
+          f"({cfg.param_count()/1e9:.0f}B)")
+    print(f"best plan: rollout={p.rollout_chips} (TP{p.rollout_tp}) | "
+          f"train={p.train_chips} (TP{p.train_tp})  "
+          f"[{pr.candidates_scored} candidates scored]\n")
+
+    print(f"{'mode':<18s} {'samples/s':>10s} {'trainer busy':>13s}")
+    for mode in ("colocated", "separated", "separated_tq",
+                 "separated_async"):
+        plan = p if mode != "colocated" else ClusterPlan(
+            args.chips, args.chips, args.chips, 4, 8,
+            reshard_s=1.0 + 0.002 * args.chips)
+        r = simulate(cfg, plan, w, mode)
+        print(f"{mode:<18s} {r['throughput_samples_per_s']:>10.2f} "
+              f"{r['trainer_busy_fraction']:>12.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""PPO on the same substrate ("under development" in the paper §6.1 —
+complete here): actor + critic with GAE over the verifiable math task.
+
+  PYTHONPATH=src python examples/ppo_quickstart.py --steps 8
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.data import PromptDataset  # noqa: E402
+from repro.data.tokenizer import ByteTokenizer  # noqa: E402
+from repro.models import init_params  # noqa: E402
+from repro.rl import (PPOConfig, critic_forward, gae,  # noqa: E402
+                      init_critic_params, math_reward, ppo_train_step)
+from repro.rl.sampling import generate  # noqa: E402
+from repro.training import OptimizerConfig, TrainState  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=4)
+    args = ap.parse_args()
+
+    tok = ByteTokenizer()
+    cfg = dataclasses.replace(get_config("qwen2_5_7b").reduced(),
+                              num_layers=2, d_model=64, d_ff=128,
+                              num_heads=2, num_kv_heads=2, head_dim=32,
+                              vocab_size=tok.vocab_size)
+    actor = TrainState.create(init_params(jax.random.PRNGKey(0), cfg))
+    critic = TrainState.create(init_critic_params(jax.random.PRNGKey(1), cfg))
+    rl = PPOConfig(vf_coef=0.5)
+    opt = OptimizerConfig(lr=5e-4, warmup_steps=2)
+    ds = PromptDataset(seed=0)
+
+    for step in range(args.steps):
+        prompts = ds.prompts_for_step(step, args.batch)
+        rows = generate(actor.params, cfg, [p["tokens"] for p in prompts],
+                        step, max_new_tokens=args.max_new)
+        S = max(len(r["tokens"]) for r in rows)
+        tokens = np.stack([r["tokens"][:S] for r in rows])
+        masks = np.stack([r["response_mask"][:S] for r in rows])
+        old_lp = np.stack([r["logprobs"][:S] for r in rows])
+
+        values = np.asarray(critic_forward(critic.params, cfg,
+                                           jnp.asarray(tokens)))
+        adv = np.zeros_like(values)
+        rets = np.zeros_like(values)
+        rewards = []
+        for i, (p, r) in enumerate(zip(prompts, rows)):
+            rew = math_reward(p["answer"], r["response_ids"])
+            rewards.append(rew)
+            idx = np.where(masks[i] > 0)[0]
+            if len(idx) == 0:
+                continue
+            traj_r = np.zeros(len(idx), np.float32)
+            traj_r[-1] = rew                       # terminal reward
+            v = np.concatenate([values[i, idx], [0.0]])
+            a, ret = gae(traj_r, v, gamma=1.0, lam=0.95)
+            adv[i, idx] = a
+            rets[i, idx] = ret
+
+        batch = {"tokens": jnp.asarray(tokens),
+                 "response_mask": jnp.asarray(masks),
+                 "old_logprob": jnp.asarray(old_lp),
+                 "advantage": jnp.asarray(adv),
+                 "returns": jnp.asarray(rets),
+                 "old_values": jnp.asarray(values)}
+        actor, critic, metrics = ppo_train_step(actor, critic, cfg, rl, opt,
+                                                batch)
+        print(f"step {step:2d} reward {np.mean(rewards):+.3f} "
+              f"policy_loss {float(metrics['policy_loss']):+.4f} "
+              f"value_loss {float(metrics['value_loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

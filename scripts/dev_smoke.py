@@ -1,0 +1,34 @@
+"""Dev-only quick smoke over all reduced configs (forward + decode)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          count_params)
+
+only = sys.argv[1:] or ARCH_IDS
+for arch in only:
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    B, S = 2, 16
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32)}
+    if cfg.arch_type == "audio":
+        batch["frames"] = jnp.ones((B, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = jnp.ones((B, cfg.vision_tokens, cfg.d_model))
+    logits, aux = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+    # decode one token
+    cache = init_cache(cfg, B, 32)
+    tok = jnp.zeros((B,), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    lg, cache = jax.jit(lambda p, c, t, q: decode_step(p, cfg, c, t, q))(
+        params, cache, tok, pos)
+    assert lg.shape == (B, cfg.vocab_size), (arch, lg.shape)
+    assert not bool(jnp.isnan(lg).any()), f"{arch}: NaN decode"
+    print(f"OK {arch:22s} params={count_params(params):,} "
+          f"logits={tuple(logits.shape)}")
+print("ALL OK")

@@ -1,0 +1,39 @@
+"""Recompute the analytic roofline terms in results/dryrun/*.json with the
+current cost model (compile evidence is untouched — only t_* / bytes
+fields are refreshed)."""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.planner.cost_model import roofline_terms  # noqa: E402
+
+MESHES = {"single": {"data": 16, "model": 16},
+          "pod": {"pod": 2, "data": 16, "model": 16}}
+
+for f in glob.glob("results/dryrun/*.json"):
+    # results/perf/*.json are hillclimb records produced with their own
+    # meshes/flags — never rewrite them with default-mesh analytics
+    rec = json.load(open(f))
+    if rec.get("status") != "ok":
+        continue
+    cfg = get_config(rec["arch"])
+    if "ssm_chunk" in f or "chunk" in f:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, ssm_chunk=512)
+    mesh = MESHES.get(rec["mesh"])
+    if mesh is None:  # hillclimb custom mesh, e.g. 32x8 — parse from chips
+        continue
+    kss = "kvseqshard" in f
+    rt = roofline_terms(cfg, rec["shape"], mesh, kv_seq_shard=kss)
+    rec.update(flops=rt["flops"],
+               hbm_bytes_per_chip=rt["hbm_bytes_per_chip"],
+               collective_bytes_per_chip=rt["collective_bytes_per_chip"],
+               t_compute=rt["t_compute"], t_memory=rt["t_memory"],
+               t_collective=rt["t_collective"],
+               bottleneck=rt["bottleneck"])
+    rec["useful_flops_ratio"] = rec["model_flops"] / max(rt["flops"], 1.0)
+    json.dump(rec, open(f, "w"), indent=1)
+print("refreshed")

@@ -1,0 +1,4 @@
+from repro.api.service import AsyncFlowService
+from repro.api.trainer import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "AsyncFlowService"]

@@ -1,0 +1,112 @@
+"""User-level interface: the RL algorithm controller (paper §5.1).
+
+``Trainer`` is the single entry point researchers modify: it owns the
+algorithm choice (GRPO/PPO), builds engines through the backend adapters,
+and runs the post-training workflow in any of the three modes. Minimal
+config in, WorkflowResult out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.configs import get_config
+from repro.core.workflow import AsyncRLRunner, WorkflowConfig
+from repro.data import PromptDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.engines import JaxRolloutEngine, JaxTrainEngine
+from repro.models import init_params
+from repro.rl.grpo import GRPOConfig
+from repro.training.optimizer import OptimizerConfig
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    arch: str = "qwen2_5_7b"
+    reduced: bool = True               # CPU-scale variant
+    algorithm: str = "grpo"            # grpo | ppo
+    mode: str = "async"                # baseline | streaming | async
+    num_steps: int = 8
+    prompts_per_step: int = 4
+    group_size: int = 4
+    max_new_tokens: int = 8
+    rollout_workers: int = 2
+    rollout_batch: int = 2
+    train_micro_batch: int = 4
+    staleness: int = 1
+    staggered: bool = False
+    lr: float = 3e-4
+    seed: int = 0
+    seq_len: int = 32
+    policy: str = "fifo"
+    reward: str = "exact"              # exact | shaped
+    kl_coef: float = 0.0               # >0: GRPO+KL with a frozen reference
+    chunk_tokens: int = 0              # >0: partial rollout (k1.5-style)
+    checkpoint_dir: str = ""           # save final state when set
+    channel_bandwidth_gbps: float = 0.0  # simulated host-net weight path
+
+
+class Trainer:
+    """from repro.api import Trainer; Trainer(TrainerConfig()).fit()"""
+
+    def __init__(self, tcfg: TrainerConfig,
+                 model_cfg=None, params=None):
+        self.tcfg = tcfg
+        cfg = model_cfg or get_config(tcfg.arch)
+        if tcfg.reduced and model_cfg is None:
+            cfg = dataclasses.replace(
+                cfg.reduced(), vocab_size=ByteTokenizer.vocab_size)
+        self.cfg = cfg
+        if params is None:
+            params = init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+        from repro.rl.reward import math_reward, math_reward_shaped
+        ref_params = None
+        if tcfg.kl_coef > 0:
+            ref_params = jax.tree.map(lambda a: a.copy(), params)
+        self.rollout_engine = JaxRolloutEngine(
+            cfg, group_size=tcfg.group_size,
+            max_new_tokens=tcfg.max_new_tokens,
+            reward_fn=(math_reward_shaped if tcfg.reward == "shaped"
+                       else math_reward),
+            ref_params=ref_params, chunk_tokens=tcfg.chunk_tokens)
+        self.train_engine = JaxTrainEngine(
+            cfg, params, rl=GRPOConfig(kl_coef=tcfg.kl_coef),
+            opt=OptimizerConfig(lr=tcfg.lr, warmup_steps=2,
+                                total_steps=tcfg.num_steps,
+                                schedule=cfg.lr_schedule
+                                if cfg.lr_schedule != "cosine" else "constant"),
+            global_batch=tcfg.prompts_per_step * tcfg.group_size,
+            seq_len=tcfg.seq_len)
+        self.dataset = PromptDataset(seed=tcfg.seed)
+
+    def fit(self):
+        t = self.tcfg
+        wcfg = WorkflowConfig(
+            mode=t.mode, num_rollout_workers=t.rollout_workers,
+            rollout_batch=t.rollout_batch,
+            train_micro_batch=t.train_micro_batch,
+            prompts_per_step=t.prompts_per_step, group_size=t.group_size,
+            num_steps=t.num_steps, staleness=t.staleness,
+            staggered=t.staggered, policy=t.policy,
+            channel_bandwidth_gbps=t.channel_bandwidth_gbps,
+            extra_columns=("ref_logprob",) if t.kl_coef > 0 else ())
+        runner = AsyncRLRunner(
+            wcfg, rollout_engine=self.rollout_engine,
+            train_engine=self.train_engine,
+            prompt_stream=lambda s: self.dataset.prompts_for_step(
+                s, t.prompts_per_step))
+        result = runner.run()
+        if t.checkpoint_dir:
+            from repro.training import save_checkpoint
+            save_checkpoint(t.checkpoint_dir, self.train_engine.state,
+                            step=int(self.train_engine.state.step))
+        return result
+
+    def restore(self, path: str) -> int:
+        """Load a checkpoint into the training engine; returns the step."""
+        from repro.training import restore_checkpoint
+        state, step = restore_checkpoint(path, self.train_engine.state)
+        self.train_engine.state = state
+        return step

@@ -1,0 +1,16 @@
+"""Qwen1.5-32B — dense decoder, MHA, QKV bias. [hf:Qwen/Qwen1.5-0.5B family]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    arch_type="dense",
+    citation="hf:Qwen/Qwen1.5-0.5B (family card)",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152_064,
+    qkv_bias=True,
+)

@@ -1,0 +1,16 @@
+from repro.core.planner.cost_model import (HW, forward_flops, kv_cache_bytes,
+                                           roofline_terms,
+                                           step_collective_bytes, step_flops,
+                                           step_hbm_bytes)
+from repro.core.planner.planner import (PlanResult, candidate_plans,
+                                        plan_resources)
+from repro.core.planner.profiling import (make_profile_fn,
+                                          profile_reduced_blocks)
+from repro.core.planner.simulator import (ClusterPlan, CostOracle, Workload,
+                                          simulate)
+
+__all__ = ["HW", "roofline_terms", "step_flops", "step_hbm_bytes",
+           "step_collective_bytes", "forward_flops", "kv_cache_bytes",
+           "simulate", "Workload", "ClusterPlan", "CostOracle",
+           "plan_resources", "PlanResult", "candidate_plans",
+           "make_profile_fn", "profile_reduced_blocks"]

@@ -1,0 +1,195 @@
+"""TransferQueue control plane — per-task controllers (paper §3.3).
+
+Each RL task (actor_rollout, ref_inference, actor_update, ...) gets a
+dedicated controller holding ONLY metadata: a binary data-status matrix
+(row x required-column) plus consumption records. Controllers operate
+independently — RL tasks never interfere algorithmically.
+
+``request()`` implements Fig. 6: scan for rows whose required columns are
+all ready and that no DP group has consumed, pack a micro-batch under a
+load-balancing policy, mark consumed atomically, and hand the *metadata*
+(indices) back; the consumer then reads the real data from the data plane.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class BatchMeta:
+    """Metadata handed to a DP group: which rows to fetch from where."""
+    indices: List[int]
+    columns: List[str]
+    consumer: str = ""
+    issued_at: float = field(default_factory=time.monotonic)
+
+
+class TransferQueueController:
+    """Metadata + scheduling for one RL task (paper Fig. 6).
+
+    Parameters
+    ----------
+    task: consumer-stage name (e.g. "actor_rollout").
+    columns: data components this task needs ready before it can consume.
+    capacity: number of rows tracked (global batch x group size, or more
+        for async multi-step buffering).
+    policy: "fifo" | "token_balance" — token_balance equalizes total token
+        counts handed to each DP group (paper §3.3 proactive load balance);
+        it needs a ``token_len`` hint column.
+    """
+
+    def __init__(self, task: str, columns: Sequence[str], capacity: int,
+                 policy: str = "fifo"):
+        self.task = task
+        self.columns = list(columns)
+        self.capacity = capacity
+        self.policy = policy
+        self._col_pos = {c: i for i, c in enumerate(self.columns)}
+        self._ready = [[False] * len(self.columns) for _ in range(capacity)]
+        self._consumed = [False] * capacity
+        # incremental bookkeeping: O(1) notify, O(avail) schedule — the
+        # §3.5 high-concurrency design (no O(capacity) metadata scans)
+        self._n_ready_cols = [0] * capacity
+        self._avail: Dict[int, None] = {}   # insertion-ordered set
+        self._token_len: Dict[int, int] = {}
+        self._tokens_served: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._closed = False
+        # instrumentation
+        self.n_requests = 0
+        self.total_wait_s = 0.0
+
+    # -- metadata notification (called by storage units) ---------------------
+
+    def _mark(self, idx: int, pos: int) -> None:
+        if not self._ready[idx][pos]:
+            self._ready[idx][pos] = True
+            self._n_ready_cols[idx] += 1
+            if self._n_ready_cols[idx] == len(self.columns) \
+                    and not self._consumed[idx]:
+                self._avail[idx] = None
+
+    def notify(self, idx: int, column: str) -> None:
+        pos = self._col_pos.get(column)
+        if pos is None or idx >= self.capacity:
+            return
+        with self._cv:
+            self._mark(idx, pos)
+            self._cv.notify_all()
+
+    def notify_many(self, idxs: Sequence[int], column: str) -> None:
+        pos = self._col_pos.get(column)
+        if pos is None:
+            return
+        with self._cv:
+            for i in idxs:
+                if i < self.capacity:
+                    self._mark(i, pos)
+            self._cv.notify_all()
+
+    def set_token_len(self, idx: int, n: int) -> None:
+        with self._lock:
+            self._token_len[idx] = n
+
+    # -- scheduling (Fig. 6) --------------------------------------------------
+
+    def _available(self) -> List[int]:
+        return list(self._avail)
+
+    def request(self, batch_size: int, consumer: str = "dp0",
+                timeout: Optional[float] = None,
+                allow_partial: bool = False) -> Optional[BatchMeta]:
+        """Block until ``batch_size`` rows are ready, then consume them.
+
+        Returns None if the queue is closed (or timed out) with nothing
+        available; a partial batch if closed/``allow_partial`` with fewer.
+        """
+        t0 = time.monotonic()
+        deadline = None if timeout is None else t0 + timeout
+        with self._cv:
+            self.n_requests += 1
+            while True:
+                n_avail = len(self._avail)
+                if n_avail >= batch_size or \
+                        (n_avail and (self._closed or allow_partial)):
+                    break
+                if self._closed and not n_avail:
+                    return None
+                remaining = None if deadline is None \
+                    else max(0.0, deadline - time.monotonic())
+                if remaining == 0.0:
+                    if n_avail and allow_partial:
+                        break
+                    return None
+                self._cv.wait(timeout=remaining if remaining is not None
+                              else 0.1)
+            if self.policy == "fifo":
+                chosen = list(itertools.islice(self._avail, batch_size))
+            else:
+                chosen = self._schedule(self._available(), batch_size,
+                                        consumer)
+            for i in chosen:
+                self._consumed[i] = True
+                self._avail.pop(i, None)
+            self.total_wait_s += time.monotonic() - t0
+            return BatchMeta(chosen, list(self.columns), consumer)
+
+    def _schedule(self, avail: List[int], n: int, consumer: str) -> List[int]:
+        n = min(n, len(avail))
+        if self.policy == "token_balance" and self._token_len:
+            # equalize processed tokens per DP group (paper §3.3): greedy
+            # long/short alternation keeps each request's token total close
+            # to n x (mean row length), so stragglers don't accumulate
+            ranked = sorted(avail, key=lambda i: self._token_len.get(i, 0))
+            mean_len = (sum(self._token_len.get(i, 0) for i in avail)
+                        / max(1, len(avail)))
+            lo, hi = 0, len(ranked) - 1
+            chosen, total = [], 0.0
+            for k in range(n):
+                if total <= mean_len * k:      # under pace -> take longest
+                    chosen.append(ranked[hi])
+                    hi -= 1
+                else:                           # over pace -> take shortest
+                    chosen.append(ranked[lo])
+                    lo += 1
+                total += self._token_len.get(chosen[-1], 0)
+            self._tokens_served[consumer] = \
+                self._tokens_served.get(consumer, 0) + total
+            return chosen
+        return avail[:n]  # fifo
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def reset(self, capacity: Optional[int] = None) -> None:
+        with self._cv:
+            if capacity is not None:
+                self.capacity = capacity
+            self._ready = [[False] * len(self.columns)
+                           for _ in range(self.capacity)]
+            self._consumed = [False] * self.capacity
+            self._n_ready_cols = [0] * self.capacity
+            self._avail.clear()
+            self._token_len.clear()
+            self._tokens_served.clear()
+            self._closed = False
+            self._cv.notify_all()
+
+    # -- introspection ----------------------------------------------------------
+
+    def num_ready(self) -> int:
+        with self._lock:
+            return len(self._available())
+
+    def num_consumed(self) -> int:
+        with self._lock:
+            return sum(self._consumed)

@@ -1,0 +1,121 @@
+"""TransferQueue facade — the streaming data scheduler bridging the
+training and inference clusters (paper §3.1, Fig. 3).
+
+Wires the data plane (N storage units) to one controller per RL task and
+exposes put/get plus the streaming-dataloader factory. All interaction is
+thread-safe and fully streamed: consumers receive micro-batches as soon as
+their required columns are ready, never waiting for the whole global batch
+— this is what enables automatic pipeline overlap across RL tasks (§4.1).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.transfer_queue.control_plane import (BatchMeta,
+                                                     TransferQueueController)
+from repro.core.transfer_queue.data_plane import DataPlane
+
+
+class TransferQueue:
+    def __init__(self, capacity: int, tasks: Dict[str, Sequence[str]],
+                 num_storage_units: int = 2, policy: str = "fifo"):
+        """tasks: {task_name: required columns}."""
+        self.capacity = capacity
+        self.data_plane = DataPlane(num_storage_units)
+        self.controllers: Dict[str, TransferQueueController] = {}
+        for task, cols in tasks.items():
+            c = TransferQueueController(task, cols, capacity, policy=policy)
+            self.controllers[task] = c
+            self.data_plane.register_controller(c)
+        self._idx_counter = itertools.count()
+        self._idx_lock = threading.Lock()
+
+    # -- producers -----------------------------------------------------------
+
+    def next_indices(self, n: int) -> List[int]:
+        """Reserve n fresh global row indices."""
+        with self._idx_lock:
+            return [next(self._idx_counter) for _ in range(n)]
+
+    def put(self, idx: int, column: str, value: Any,
+            token_len: Optional[int] = None) -> None:
+        if token_len is not None:
+            for c in self.controllers.values():
+                c.set_token_len(idx, token_len)
+        self.data_plane.put(idx, column, value)
+
+    def put_batch(self, idxs: Sequence[int], column: str,
+                  values: Sequence[Any],
+                  token_lens: Optional[Sequence[int]] = None) -> None:
+        if token_lens is not None:
+            for c in self.controllers.values():
+                for i, n in zip(idxs, token_lens):
+                    c.set_token_len(i, n)
+        self.data_plane.put_batch(idxs, column, values)
+
+    # -- consumers -----------------------------------------------------------
+
+    def get(self, task: str, batch_size: int, consumer: str = "dp0",
+            timeout: Optional[float] = None, allow_partial: bool = False
+            ) -> Optional[Dict[str, Any]]:
+        """Blocking read of a micro-batch for ``task``.
+
+        Returns {"indices": [...], <column>: [...]} or None when closed."""
+        ctrl = self.controllers[task]
+        meta = ctrl.request(batch_size, consumer, timeout=timeout,
+                            allow_partial=allow_partial)
+        if meta is None or not meta.indices:
+            return None
+        data = self.data_plane.get(meta.indices, meta.columns)
+        data["indices"] = meta.indices
+        return data
+
+    def dataloader(self, task: str, batch_size: int, consumer: str = "dp0",
+                   allow_partial: bool = True) -> "StreamingDataLoader":
+        return StreamingDataLoader(self, task, batch_size, consumer,
+                                   allow_partial)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close_task(self, task: str) -> None:
+        self.controllers[task].close()
+
+    def close(self) -> None:
+        for c in self.controllers.values():
+            c.close()
+
+    def reset(self, capacity: Optional[int] = None) -> None:
+        if capacity is not None:
+            self.capacity = capacity
+        self.data_plane.clear()
+        for c in self.controllers.values():
+            c.reset(capacity)
+        self._idx_counter = itertools.count()
+
+
+class StreamingDataLoader:
+    """PyTorch-DataLoader-style iterator over a TransferQueue task
+    (paper §3.4, Code 1). Iterates until the queue is closed and drained.
+
+    In a multi-rank DP group only the leader rank talks to the queue and
+    broadcasts to peers (§3.5); ``consumer`` identifies the DP group.
+    """
+
+    def __init__(self, tq: TransferQueue, task: str, batch_size: int,
+                 consumer: str, allow_partial: bool = True):
+        self.tq = tq
+        self.task = task
+        self.batch_size = batch_size
+        self.consumer = consumer
+        self.allow_partial = allow_partial
+
+    def __iter__(self):
+        while True:
+            batch = self.tq.get(self.task, self.batch_size, self.consumer,
+                                allow_partial=self.allow_partial)
+            if batch is None:
+                return
+            idxs = batch.pop("indices")
+            yield batch, idxs

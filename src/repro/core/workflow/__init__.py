@@ -1,0 +1,10 @@
+from repro.core.workflow.async_engine import (AsyncRLRunner, WorkflowConfig,
+                                              WorkflowResult)
+from repro.core.workflow.events import Event, EventLog
+from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
+                                             VersionedWeights, WeightChannel,
+                                             WeightReceiver, WeightSender)
+
+__all__ = ["AsyncRLRunner", "WorkflowConfig", "WorkflowResult", "EventLog",
+           "Event", "WeightChannel", "WeightSender", "WeightReceiver",
+           "StaggeredUpdateGroup", "VersionedWeights"]

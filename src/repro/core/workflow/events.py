@@ -1,0 +1,103 @@
+"""Execution-timeline event log → Gantt chart / bubble-fraction analysis
+(paper Fig. 11)."""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class Event:
+    instance: str   # e.g. "rollout-0", "train-0"
+    kind: str       # "generate" | "update" | "wait" | "weight_sync" | ...
+    start: float
+    end: float
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+class EventLog:
+    def __init__(self):
+        self._events: List[Event] = []
+        self._lock = threading.Lock()
+        self.t0 = time.monotonic()
+
+    def record(self, instance: str, kind: str, start: float, end: float,
+               **meta) -> None:
+        with self._lock:
+            self._events.append(Event(instance, kind, start - self.t0,
+                                      end - self.t0, meta))
+
+    class _Span:
+        def __init__(self, log, instance, kind, meta):
+            self.log, self.instance, self.kind, self.meta = log, instance, kind, meta
+
+        def __enter__(self):
+            self.start = time.monotonic()
+            return self
+
+        def __exit__(self, *exc):
+            self.log.record(self.instance, self.kind, self.start,
+                            time.monotonic(), **self.meta)
+
+    def span(self, instance: str, kind: str, **meta) -> "_Span":
+        return self._Span(self, instance, kind, meta)
+
+    # -- analysis ---------------------------------------------------------
+
+    def events(self, instance: Optional[str] = None) -> List[Event]:
+        with self._lock:
+            ev = list(self._events)
+        if instance:
+            ev = [e for e in ev if e.instance == instance]
+        return sorted(ev, key=lambda e: e.start)
+
+    def instances(self) -> List[str]:
+        with self._lock:
+            return sorted({e.instance for e in self._events})
+
+    def busy_fraction(self, instance: str,
+                      busy_kinds=("generate", "update", "forward")) -> float:
+        ev = self.events(instance)
+        if not ev:
+            return 0.0
+        span = max(e.end for e in ev) - min(e.start for e in ev)
+        busy = sum(e.duration for e in ev if e.kind in busy_kinds)
+        return busy / max(span, 1e-9)
+
+    def bubble_fraction(self, busy_kinds=("generate", "update", "forward")
+                        ) -> Dict[str, float]:
+        return {i: 1.0 - self.busy_fraction(i, busy_kinds)
+                for i in self.instances()}
+
+    def to_rows(self) -> List[dict]:
+        return [dict(instance=e.instance, kind=e.kind, start=e.start,
+                     end=e.end, **e.meta) for e in self.events()]
+
+    def render_gantt(self, width: int = 80,
+                     busy_kinds=("generate", "update", "forward")) -> str:
+        """ASCII Gantt chart (Fig. 11 analogue)."""
+        ev = self.events()
+        if not ev:
+            return "(no events)"
+        t_min = min(e.start for e in ev)
+        t_max = max(e.end for e in ev)
+        scale = width / max(t_max - t_min, 1e-9)
+        sym = {"generate": "G", "update": "U", "forward": "F",
+               "weight_sync": "w", "wait": ".", "reward": "r"}
+        lines = []
+        for inst in self.instances():
+            row = [" "] * width
+            for e in self.events(inst):
+                a = int((e.start - t_min) * scale)
+                b = max(a + 1, int((e.end - t_min) * scale))
+                ch = sym.get(e.kind, "#")
+                for x in range(a, min(b, width)):
+                    row[x] = ch
+            lines.append(f"{inst:>12s} |{''.join(row)}|")
+        return "\n".join(lines)

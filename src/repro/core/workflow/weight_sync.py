@@ -1,0 +1,161 @@
+"""Parameter-update module — WeightSender / WeightReceiver (paper §4.2.3)
+and the delayed parameter update mechanism (§4.2.2).
+
+Two modes, mirroring the paper:
+
+* ``sync``  — rollout blocks while weights transfer (models the
+  high-bandwidth HCCL/ICI device-to-device path).
+* ``async`` — the training engine offloads weights to host buffers and a
+  background thread ships them over the "host network" (here: an
+  in-process channel with optional simulated bandwidth); rollout keeps
+  generating on the old weights and swaps at the generation-iteration
+  boundary, paying only the H2D load (delayed parameter update).
+
+Sub-step asynchrony (§4.2.2 / Fig. 8d, the paper's future work): with
+``staggered=True``, receivers for different rollout instances are updated
+sequentially so part of each global batch is produced by the newest
+weights — implemented here as a beyond-paper feature.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+@dataclass
+class VersionedWeights:
+    version: int
+    host_params: Any  # pytree of np.ndarray (host memory staging buffer)
+
+
+class WeightChannel:
+    """In-process stand-in for the host network between clusters.
+
+    ``bandwidth_gbps`` > 0 adds a transfer delay proportional to payload
+    size — used by the simulator-calibrated benchmarks.
+    """
+
+    def __init__(self, bandwidth_gbps: float = 0.0):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._latest: Optional[VersionedWeights] = None
+        self.bandwidth_gbps = bandwidth_gbps
+        self.bytes_sent = 0
+
+    def offer(self, vw: VersionedWeights) -> None:
+        if self.bandwidth_gbps > 0:
+            nbytes = sum(a.nbytes for a in jax.tree.leaves(vw.host_params))
+            time.sleep(nbytes / (self.bandwidth_gbps * 1e9 / 8))
+            self.bytes_sent += nbytes
+        with self._cv:
+            if self._latest is None or vw.version > self._latest.version:
+                self._latest = vw
+            self._cv.notify_all()
+
+    def peek(self) -> Optional[VersionedWeights]:
+        with self._lock:
+            return self._latest
+
+    def wait_for(self, version: int, timeout: Optional[float] = None
+                 ) -> Optional[VersionedWeights]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while self._latest is None or self._latest.version < version:
+                rem = None if deadline is None else deadline - time.monotonic()
+                if rem is not None and rem <= 0:
+                    return None
+                self._cv.wait(timeout=rem if rem is not None else 0.1)
+            return self._latest
+
+
+class WeightSender:
+    """Training-cluster side. ``publish`` is non-blocking in async mode:
+    device→host offload + channel send happen on a background thread,
+    overlapping with the next training step (§4.2.3)."""
+
+    def __init__(self, channel: WeightChannel, mode: str = "async"):
+        assert mode in ("sync", "async")
+        self.channel = channel
+        self.mode = mode
+        self._pending: Optional[threading.Thread] = None
+
+    def publish(self, params, version: int) -> None:
+        def _send():
+            host = jax.tree.map(lambda a: np.asarray(a), params)
+            self.channel.offer(VersionedWeights(version, host))
+
+        if self.mode == "sync":
+            _send()
+        else:
+            if self._pending is not None:
+                self._pending.join()
+            self._pending = threading.Thread(target=_send, daemon=True)
+            self._pending.start()
+
+    def flush(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+
+class WeightReceiver:
+    """Inference-cluster side. Keeps the live device params plus the staged
+    host buffer; ``maybe_swap()`` is called at generation-iteration
+    boundaries and pays only H2D (delayed parameter update, §4.2.2)."""
+
+    def __init__(self, channel: WeightChannel, init_params, version: int = 0,
+                 to_device: Optional[Callable] = None):
+        self.channel = channel
+        self.params = init_params
+        self.version = version
+        self._to_device = to_device or (lambda tree: jax.tree.map(
+            jax.numpy.asarray, tree))
+
+    def staged_version(self) -> int:
+        vw = self.channel.peek()
+        return vw.version if vw else self.version
+
+    def maybe_swap(self) -> bool:
+        """Swap in the newest staged weights if any. Returns True if swapped."""
+        vw = self.channel.peek()
+        if vw is not None and vw.version > self.version:
+            self.params = self._to_device(vw.host_params)
+            self.version = vw.version
+            return True
+        return False
+
+    def wait_and_swap(self, version: int, timeout: Optional[float] = None
+                      ) -> bool:
+        vw = self.channel.wait_for(version, timeout)
+        if vw is None:
+            return False
+        self.params = self._to_device(vw.host_params)
+        self.version = vw.version
+        return True
+
+
+class StaggeredUpdateGroup:
+    """Sub-step asynchrony (Fig. 8d): rollout instances update one at a
+    time so the fleet keeps serving while each instance reloads."""
+
+    def __init__(self, receivers: List[WeightReceiver]):
+        self.receivers = receivers
+        self._lock = threading.Lock()
+        self._updating: Optional[int] = None
+
+    def try_begin_update(self, idx: int) -> bool:
+        with self._lock:
+            if self._updating is None:
+                self._updating = idx
+                return True
+            return False
+
+    def end_update(self, idx: int) -> None:
+        with self._lock:
+            if self._updating == idx:
+                self._updating = None

@@ -1,0 +1,4 @@
+from repro.data.dataset import MathDataset, MathSample, PromptDataset
+from repro.data.tokenizer import ByteTokenizer
+
+__all__ = ["ByteTokenizer", "MathDataset", "MathSample", "PromptDataset"]

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs, dp_axes,
+                                        param_spec, state_pspecs, to_named,
+                                        tree_pspecs)
+
+__all__ = ["param_spec", "tree_pspecs", "state_pspecs", "batch_pspecs",
+           "cache_pspecs", "to_named", "dp_axes"]

@@ -1,0 +1,239 @@
+"""Sharding rules: params / optimizer state / inputs → PartitionSpecs.
+
+Scheme (Megatron-TP x FSDP, MaxText-style logical axes):
+  * "model" axis — tensor parallel: attention heads, FFN hidden, vocab,
+    MoE experts (expert parallel when num_experts % model == 0, else
+    tensor-parallel expert FFN), mamba/rglru channel dims.
+  * "data" axis  — batch data parallel + FSDP weight sharding (params and
+    optimizer state shard their d_model-ish dim over "data"; XLA inserts
+    the per-layer all-gathers).
+  * "pod" axis   — pure data parallel across pods (multi-pod mesh);
+    gradients all-reduce over it, parameters are NOT sharded over it.
+
+Rules are path-pattern based so they cover every architecture in the zoo.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def param_spec(path: str, leaf, cfg, mesh: Mesh) -> P:
+    """path: "/"-joined tree path, e.g. "blocks/attn/wq/w"."""
+    shape = leaf.shape
+    stacked = bool(re.match(
+        r"^(blocks|dense_blocks|tiles|enc_blocks|dec_blocks)(/|$)", path)) \
+        and len(shape) >= 1
+    lead: tuple = (None,) if stacked else ()
+
+    def spec(*axes) -> P:
+        # drop axis names that don't divide the corresponding dim
+        ax = list(axes)
+        off = len(lead)
+        for i, a in enumerate(ax):
+            if a is None:
+                continue
+            dim = shape[off + i] if off + i < len(shape) else 0
+            if not _div(dim, mesh, a):
+                ax[i] = None
+        return P(*lead, *ax)
+
+    # ---- embeddings / heads -------------------------------------------------
+    if path.endswith("embed/table"):
+        return spec("model", "data")
+    if path.endswith("lm_head/w"):
+        return spec("data", "model")
+    if "enc_pos" in path or "dec_pos" in path:
+        return spec(None, None)
+
+    # ---- norms / scalars -----------------------------------------------------
+    if "/ln" in path or "norm" in path or path.endswith("lambda") \
+            or path.endswith("d_skip") or path.endswith("conv_b"):
+        return spec(*([None] * (len(shape) - len(lead))))
+
+    # ---- MoE -------------------------------------------------------------------
+    if "/experts/" in path:  # (E, d, dff) or (E, dff, d)
+        E = shape[len(lead)]
+        if _div(E, mesh, "model"):
+            return spec("model", None, None)          # expert parallel
+        if path.endswith("down"):
+            return spec(None, "model", "data")        # TP experts
+        return spec(None, "data", "model")
+    if "/router/" in path:
+        return spec("data", None)
+    if "/shared/" in path:
+        if path.endswith("down/w"):
+            return spec("model", "data")
+        return spec("data", "model")
+
+    # ---- MLA --------------------------------------------------------------------
+    if path.endswith("w_dkv/w") or path.endswith("w_krope/w") \
+            or path.endswith("w_dq/w"):
+        return spec("data", None)
+    if path.endswith("w_uk/w") or path.endswith("w_uv/w") \
+            or path.endswith("w_uq/w"):
+        return spec(None, "model")
+    if path.endswith("w_q/w"):
+        return spec("data", "model")
+
+    # ---- attention -----------------------------------------------------------------
+    if re.search(r"/(wq|wk|wv)/w$", path):
+        return spec("data", "model")
+    if re.search(r"/(wq|wk|wv)/b$", path):
+        return spec("model")
+    if path.endswith("wo/w"):
+        return spec("model", "data")
+    if path.endswith("wo/b"):
+        return spec(None)
+
+    # ---- MLP --------------------------------------------------------------------------
+    if re.search(r"/(up|gate)/w$", path):
+        return spec("data", "model")
+    if path.endswith("down/w"):
+        return spec("model", "data")
+
+    # ---- mamba -------------------------------------------------------------------------
+    if path.endswith("in_proj/w"):
+        return spec("data", "model")
+    if path.endswith("conv_w"):
+        return spec(None, "model")
+    if path.endswith("x_proj/w"):
+        return spec("model", None)
+    if path.endswith("dt_proj/w"):
+        return spec(None, "model")
+    if path.endswith("dt_proj/b"):
+        return spec("model")
+    if path.endswith("a_log"):
+        return spec("model", None)
+    if path.endswith("out_proj/w") or path.endswith("out/w"):
+        return spec("model", "data")
+
+    # ---- rglru ---------------------------------------------------------------------------
+    if re.search(r"/(in_x|in_z)/w$", path):
+        return spec("data", "model")
+    if re.search(r"/(gate_a|gate_x)/w$", path):
+        return spec(None, "model")
+
+    # ---- fallback: replicate ----------------------------------------------------------------
+    return spec(*([None] * (len(shape) - len(lead))))
+
+
+def tree_pspecs(tree, cfg, mesh: Mesh):
+    """Pytree of PartitionSpecs matching ``tree`` (params or a like-shaped
+    optimizer-moment tree)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for kpath, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kpath)
+        if leaf.ndim == 0:
+            specs.append(P())
+        else:
+            specs.append(param_spec(path, leaf, cfg, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_pspecs(state_shape, cfg, mesh: Mesh):
+    """Shardings for a TrainState(params, {"m","v","count"}, step)."""
+    p = tree_pspecs(state_shape.params, cfg, mesh)
+    return type(state_shape)(
+        params=p,
+        opt_state={"m": tree_pspecs(state_shape.opt_state["m"], cfg, mesh),
+                   "v": tree_pspecs(state_shape.opt_state["v"], cfg, mesh),
+                   "count": P()},
+        step=P())
+
+
+# ---------------------------------------------------------------------------
+# input rules
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(batch_shape, cfg, mesh: Mesh, *, batch_sharded=True):
+    """Training/prefill batch: leading dim is global batch."""
+    dp = dp_axes(mesh) if batch_sharded else None
+
+    def one(k, leaf):
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        return P(dp, *([None] * (nd - 1)))
+
+    return {k: one(k, v) for k, v in batch_shape.items()}
+
+
+def cache_pspecs(cache_shape, cfg, mesh: Mesh, *, batch: int,
+                 kv_seq_shard: bool = False):
+    """Decode KV/state caches. Layout conventions (leading layer axis):
+      gqa  k/v      (L, B, S, kv, hd)
+      mla  c_kv     (L, B, S, r), k_rope (L, B, S, dr)
+      ssm  h        (L, B, di, ds), conv (L, B, kc-1, di)
+      hybrid rec h  (Lr, B, w), conv (Lr, B, 3, w); att as gqa
+
+    batch > 1  → B over dp axes; batch == 1 (long_500k) → the sequence dim
+    (gqa/mla) shards over "data" instead.
+    """
+    dp = dp_axes(mesh)
+    b_ax = dp if batch > 1 and batch % int(np.prod(
+        [mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]
+    )) == 0 else None
+
+    def one(path, leaf):
+        nd = leaf.ndim
+        last = path.rsplit("/", 1)[-1]
+        if last in ("k", "v") or "cross_" in path:
+            # (L, B, S, kv, hd)
+            kv = leaf.shape[3]
+            kv_ax = "model" if _div(kv, mesh, "model") else None
+            s_ax = "data" if (b_ax is None and
+                              _div(leaf.shape[2], mesh, "data")) else None
+            if kv_ax is None and kv_seq_shard and s_ax != "model" \
+                    and _div(leaf.shape[2], mesh, "model"):
+                s_ax = "model"   # flash-decode style seq sharding (HC3)
+            return P(None, b_ax, s_ax, kv_ax, None)
+        if path.endswith("c_kv") or path.endswith("k_rope"):
+            s_ax = "data" if (b_ax is None and
+                              _div(leaf.shape[2], mesh, "data")) else None
+            if kv_seq_shard and s_ax is None \
+                    and _div(leaf.shape[2], mesh, "model"):
+                s_ax = "model"
+            return P(None, b_ax, s_ax, None)
+        if path.endswith("/h") or path == "h":
+            if nd == 4:   # ssm (L,B,di,ds)
+                return P(None, b_ax,
+                         "model" if _div(leaf.shape[2], mesh, "model")
+                         else None, None)
+            return P(None, b_ax,
+                     "model" if _div(leaf.shape[2], mesh, "model") else None)
+        if path.endswith("conv"):
+            return P(None, b_ax, None,
+                     "model" if _div(leaf.shape[3], mesh, "model") else None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for kpath, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kpath)
+        specs.append(one(path, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+from repro.engines.adapter import EngineRegistry, RLAdapter
+from repro.engines.rollout_engine import JaxRolloutEngine
+from repro.engines.train_engine import JaxTrainEngine
+
+__all__ = ["RLAdapter", "EngineRegistry", "JaxRolloutEngine",
+           "JaxTrainEngine"]

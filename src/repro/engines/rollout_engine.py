@@ -1,0 +1,180 @@
+"""JAX rollout engine — the inference-cluster backend.
+
+Implements the AsyncRLRunner producer protocol: ``generate(params,
+prompts, rng)`` samples G responses per prompt with the KV-cache decode
+loop, scores them with the rule-based reward, computes GRPO group
+advantages, and returns one experience row per sample (the columns the
+actor_update task consumes through TransferQueue).
+
+**Partial rollout** (k1.5-style, paper §4.2.1): with ``chunk_tokens`` set,
+each generate() call advances every sequence by at most ``chunk_tokens``
+tokens; unfinished sequences are handed back as *continuations* that
+re-enter TransferQueue and resume on a later call — possibly under newer
+weights (sub-step asynchrony). Behavior logprobs of already-generated
+tokens are preserved verbatim (the behavior policy is the chunk-wise
+mixture, exactly what old_logprob must record); GRPO group advantages are
+emitted only once every member of a group has finished.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List
+
+import numpy as np
+
+from repro.engines.adapter import EngineRegistry, RLAdapter
+from repro.rl.advantage import grpo_advantages
+from repro.rl.reward import math_reward
+from repro.rl.sampling import generate as sample_generate
+
+
+@EngineRegistry.register("jax_rollout")
+class JaxRolloutEngine(RLAdapter):
+    def __init__(self, cfg, *, group_size: int = 4, max_new_tokens: int = 8,
+                 temperature: float = 1.0, reward_fn=math_reward,
+                 ref_params=None, chunk_tokens: int = 0):
+        """ref_params: frozen reference policy — when set, the engine also
+        runs the *reference inference* RL task (per-token ref logprobs for
+        the KL penalty), adding the third task of the paper's GRPO+KL
+        dataflow through TransferQueue.
+
+        chunk_tokens > 0 enables partial rollout (see module docstring)."""
+        self.cfg = cfg
+        self.group_size = group_size
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self.reward_fn = reward_fn
+        self.ref_params = ref_params
+        self.chunk_tokens = chunk_tokens
+        self._groups: dict = {}          # group id -> finished members
+        self._glock = threading.Lock()
+        self._gid = 0
+
+    # AsyncRLRunner protocol -------------------------------------------------
+    def generate(self, params, prompts: List[dict], rng) -> List[dict]:
+        """prompts: [{"tokens": np.ndarray, "answer": int, ...}] ->
+        one row per (prompt x G) sample."""
+        G = self.group_size
+        flat = [p["tokens"] for p in prompts for _ in range(G)]
+        seed = int(rng.integers(0, 2**31 - 1))
+        outs = sample_generate(params, self.cfg, flat, seed,
+                               max_new_tokens=self.max_new_tokens,
+                               temperature=self.temperature)
+        ref_lps = None
+        if self.ref_params is not None:
+            import jax.numpy as jnp
+
+            from repro.models import forward
+            from repro.rl.loss import token_logprobs
+            toks = jnp.asarray(np.stack([o["tokens"] for o in outs]))
+            logits, _ = forward(self.ref_params, self.cfg, {"tokens": toks})
+            lp, _ = token_logprobs(logits[:, :-1], toks[:, 1:])
+            ref_lps = np.concatenate(
+                [np.zeros((lp.shape[0], 1), np.float32), np.asarray(lp)], 1)
+        rows = []
+        for pi, p in enumerate(prompts):
+            group = outs[pi * G:(pi + 1) * G]
+            rewards = np.asarray([self.reward_fn(p["answer"],
+                                                 o["response_ids"])
+                                  for o in group], np.float32)
+            advs = np.asarray(grpo_advantages(rewards))
+            for gi, (o, r, a) in enumerate(zip(group, rewards, advs)):
+                row = dict(
+                    prompt=p, response=o["tokens"],
+                    logprob=o["logprobs"],
+                    response_mask=o["response_mask"],
+                    reward=float(r), advantage=float(a),
+                    token_len=int(o["response_mask"].sum()))
+                if ref_lps is not None:
+                    row["ref_logprob"] = ref_lps[pi * G + gi]
+                rows.append(row)
+        return rows
+
+    def generate_sequences(self, prompts, **kw):
+        raise RuntimeError("use generate(params, prompts, rng)")
+
+    # -- partial rollout (paper §4.2.1 / k1.5) ------------------------------
+
+    def _new_gid(self) -> int:
+        with self._glock:
+            self._gid += 1
+            return self._gid
+
+    def generate_chunked(self, params, items: List[dict], rng, *,
+                         version: int = 0):
+        """items: fresh prompt dicts or continuation dicts (``_cont``).
+        Returns (finished_rows, continuations). Each call advances every
+        sequence by at most ``chunk_tokens`` tokens."""
+        C = self.chunk_tokens or self.max_new_tokens
+        seqs = []
+        for it in items:
+            if it.get("_cont"):
+                seqs.append(it)
+            else:  # fresh prompt -> spawn G group members
+                gid = self._new_gid()
+                for m in range(self.group_size):
+                    seqs.append({"_cont": True, "gid": gid, "member": m,
+                                 "prompt": it,
+                                 "tokens": np.asarray(it["tokens"]),
+                                 "logprobs": np.zeros(len(it["tokens"]),
+                                                      np.float32),
+                                 "gen_len": 0, "versions": []})
+        if not seqs:
+            return [], []
+
+        seed = int(rng.integers(0, 2**31 - 1))
+        outs = sample_generate(params, self.cfg,
+                               [s["tokens"] for s in seqs], seed,
+                               max_new_tokens=C,
+                               temperature=self.temperature)
+        finished_members, continuations = [], []
+        from repro.data.tokenizer import ByteTokenizer
+        eos = ByteTokenizer.eos_id
+        for s, o in zip(seqs, outs):
+            start = len(s["tokens"])
+            new_toks = np.asarray(o["tokens"][start:start + C])
+            new_lps = np.asarray(o["logprobs"][start:start + C])
+            # truncate at EOS within the chunk
+            hits = np.where(new_toks == eos)[0]
+            n_new = int(hits[0]) + 1 if len(hits) else len(new_toks)
+            s = dict(s)
+            s["tokens"] = np.concatenate([s["tokens"], new_toks[:n_new]])
+            s["logprobs"] = np.concatenate([s["logprobs"], new_lps[:n_new]])
+            s["gen_len"] += n_new
+            s["versions"] = s["versions"] + [version]
+            done = len(hits) > 0 or s["gen_len"] >= self.max_new_tokens
+            if done:
+                finished_members.append(s)
+            else:
+                continuations.append(s)
+
+        rows = self._emit_finished_groups(finished_members)
+        return rows, continuations
+
+    def _emit_finished_groups(self, members: List[dict]) -> List[dict]:
+        """Buffer finished members per group; once all G are in, compute
+        group advantages and emit experience rows."""
+        complete = []
+        with self._glock:
+            for s in members:
+                buf = self._groups.setdefault(s["gid"], [])
+                buf.append(s)
+                if len(buf) == self.group_size:
+                    complete.append(self._groups.pop(s["gid"]))
+        rows = []
+        for group in complete:
+            p = group[0]["prompt"]
+            plen = len(np.asarray(p["tokens"]))
+            rewards = np.asarray(
+                [self.reward_fn(p["answer"], s["tokens"][plen:])
+                 for s in group], np.float32)
+            advs = np.asarray(grpo_advantages(rewards))
+            for s, r, a in zip(group, rewards, advs):
+                mask = np.zeros(len(s["tokens"]), np.float32)
+                mask[plen:] = 1.0
+                rows.append(dict(
+                    prompt=p, response=s["tokens"], logprob=s["logprobs"],
+                    response_mask=mask, reward=float(r), advantage=float(a),
+                    token_len=int(s["gen_len"]),
+                    chunk_versions=s["versions"]))
+        return rows

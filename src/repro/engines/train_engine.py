@@ -1,0 +1,119 @@
+"""JAX training engine — the training-cluster backend.
+
+Implements the AsyncRLRunner consumer protocol: ``update(batch)``
+accumulates GRPO gradients over streamed micro-batches and applies the
+AdamW step once a full global batch has passed through (so streaming
+micro-consumption is algorithm-identical to whole-batch training).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engines.adapter import EngineRegistry, RLAdapter
+from repro.rl.grpo import GRPOConfig, grpo_loss_fn
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_state import TrainState
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl"))
+def _grad_microbatch(params, cfg, rl, batch):
+    (_, metrics), grads = jax.value_and_grad(grpo_loss_fn, has_aux=True)(
+        params, cfg, batch, rl)
+    return grads, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("opt_cfg",))
+def _apply(state: TrainState, grads, n_micro, opt_cfg):
+    grads = jax.tree.map(lambda g: g / n_micro, grads)
+    new_state, gnorm = state.apply_gradients(grads, opt_cfg)
+    return new_state, gnorm
+
+
+@EngineRegistry.register("jax_train")
+class JaxTrainEngine(RLAdapter):
+    def __init__(self, cfg, init_params, *, rl: Optional[GRPOConfig] = None,
+                 opt: Optional[OptimizerConfig] = None,
+                 global_batch: int = 16, seq_len: int = 32):
+        self.cfg = cfg
+        self.rl = rl or GRPOConfig()
+        self.opt_cfg = opt or OptimizerConfig(lr=3e-4, warmup_steps=2)
+        self.state = TrainState.create(init_params)
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self._accum = None
+        self._accum_n = 0
+        self._accum_metrics: List[dict] = []
+        self.version = 0
+
+    # AsyncRLRunner protocol --------------------------------------------------
+    @property
+    def params(self):
+        return self.state.params
+
+    def _pack(self, batch: Dict[str, list]) -> dict:
+        """Rows from TransferQueue -> fixed-shape jnp batch."""
+        n = len(batch["response"])
+        S = self.seq_len
+        tokens = np.zeros((n, S), np.int32)
+        masks = np.zeros((n, S), np.float32)
+        old_lp = np.zeros((n, S), np.float32)
+        adv = np.asarray(batch["advantage"], np.float32)
+        for i in range(n):
+            t = np.asarray(batch["response"][i])[:S]
+            tokens[i, :len(t)] = t
+            m = np.asarray(batch["response_mask"][i])[:S] \
+                if "response_mask" in batch else np.ones(len(t))
+            masks[i, :len(m)] = m
+            lp = np.asarray(batch["logprob"][i])[:S]
+            old_lp[i, :len(lp)] = lp
+        out = {"tokens": jnp.asarray(tokens),
+               "response_mask": jnp.asarray(masks),
+               "old_logprob": jnp.asarray(old_lp),
+               "advantage": jnp.asarray(adv)}
+        if "ref_logprob" in batch:
+            ref = np.zeros((n, S), np.float32)
+            for i in range(n):
+                rl = np.asarray(batch["ref_logprob"][i])[:S]
+                ref[i, :len(rl)] = rl
+            out["ref_logprob"] = jnp.asarray(ref)
+        return out
+
+    def update(self, batch: Dict[str, list]) -> dict:
+        jb = self._pack(batch)
+        grads, metrics = _grad_microbatch(self.state.params, self.cfg,
+                                          self.rl, jb)
+        if self._accum is None:
+            self._accum = grads
+        else:
+            self._accum = jax.tree.map(jnp.add, self._accum, grads)
+        self._accum_n += len(batch["advantage"])
+        self._accum_metrics.append(
+            {k: float(v) for k, v in metrics.items()})
+
+        if self._accum_n >= self.global_batch:
+            n_micro = max(1, len(self._accum_metrics))
+            self.state, gnorm = _apply(self.state, self._accum,
+                                       float(n_micro), self.opt_cfg)
+            self.version += 1
+            out = {k: float(np.mean([m[k] for m in self._accum_metrics]))
+                   for k in self._accum_metrics[0]}
+            out.update(grad_norm=float(gnorm),
+                       mean_reward=float(np.mean(batch["reward"])))
+            self._accum, self._accum_n = None, 0
+            self._accum_metrics = []
+            return out
+        return {}
+
+    def update_actor(self, batch, **kw):
+        return self.update(batch)
+
+    def get_weights(self):
+        return self.state.params
+
+    def load_weights(self, weights) -> None:
+        self.state = self.state._replace(params=weights)

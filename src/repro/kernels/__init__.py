@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the RL post-training compute hotspots.
+
+Each subpackage ships <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle):
+
+  flash_attention  — blockwise causal/sliding-window GQA (prefill + train)
+  decode_attention — flash-decode vs long KV caches (decode_32k, long_500k)
+  rglru_scan       — RG-LRU linear recurrence (recurrentgemma)
+  mamba_scan       — mamba-1 selective scan (falcon-mamba)
+  grpo_logprob     — fused token-logprob+entropy over 100k-256k vocab
+"""

@@ -1,0 +1,15 @@
+"""jit'd wrapper; interpret-mode off-TPU, oracle fallback for odd shapes."""
+import jax
+
+from repro.kernels.decode_attention.decode_attention import \
+    decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, valid, *, block_k=512):
+    S = k_cache.shape[1]
+    bk = min(block_k, S)
+    if S % bk:
+        return decode_attention_ref(q, k_cache, v_cache, valid)
+    return decode_attention_kernel(q, k_cache, v_cache, valid, block_k=bk,
+                                   interpret=jax.default_backend() != "tpu")

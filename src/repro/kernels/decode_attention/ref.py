@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode_attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """q: (B,1,H,hd); caches: (B,S,KVH,hd); valid: (B,S)."""
+    B, _, H, hd = q.shape
+    KVH = k_cache.shape[2]
+    if KVH != H:
+        k_cache = jnp.repeat(k_cache, H // KVH, axis=2)
+        v_cache = jnp.repeat(v_cache, H // KVH, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,114 @@
+"""Blockwise causal GQA flash attention — Pallas TPU kernel.
+
+TPU adaptation of the classic FlashAttention tiling:
+  * grid = (batch, q_heads, num_q_blocks, num_k_blocks); the trailing grid
+    dim runs sequentially on TPU, so the online-softmax state (m, l, acc)
+    lives in VMEM scratch and carries across k-blocks.
+  * Q block (BQ=128 rows) stays resident in VMEM; K/V stream through in
+    BK=128-column blocks — MXU-aligned (head_dim multiples of 128 get full
+    128x128 systolic utilization; smaller head dims still map via lane
+    packing).
+  * Softmax state in fp32 VREGs; inputs may be bf16.
+  * Causal + optional sliding-window band masks applied per block; fully
+    masked blocks still execute (no early-exit on TPU grids) but contribute
+    zero weight.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q, block_k, num_k_blocks, window, scale):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (BQ, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)            # (BK, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (BQ,BK)
+
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_kernel(q, k, v, *, window=0, block_q=128, block_k=128,
+                           interpret=False):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd) — causal, optional window.
+
+    Returns (B, Sq, H, hd), same dtype as q.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KVH, _ = k.shape
+    n_rep = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = hd ** -0.5
+
+    # layout: (B, H, S, hd) blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, num_k_blocks=nk,
+        window=window, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, n_rep=n_rep: (b, h // n_rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, n_rep=n_rep: (b, h // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

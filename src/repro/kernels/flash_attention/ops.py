@@ -1,0 +1,19 @@
+"""jit'd public wrapper: Pallas kernel on TPU, interpret-mode elsewhere,
+falling back to the jnp oracle for shapes the kernel doesn't tile."""
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, window=0, block_q=128, block_k=128):
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return flash_attention_ref(q, k, v, window=window)
+    return flash_attention_kernel(q, k, v, window=window, block_q=bq,
+                                  block_k=bk, interpret=not _on_tpu())

@@ -1,0 +1,98 @@
+"""Fused token log-prob + entropy over large vocab logits — Pallas kernel.
+
+The biggest tensor in the GRPO actor-update step is the logits
+(B, S, V) with V up to 256k: computing log-softmax naively materializes a
+second (B, S, V) array and is purely HBM-bandwidth bound. This kernel
+streams vocab blocks through VMEM once, maintaining the online
+log-sum-exp state plus two fused reductions:
+
+  m, l        — running max / rescaled sum of exp (standard online LSE)
+  t           — running Σ exp(x_i − m) · x_i (for entropy)
+  g           — the target token's logit (picked up when its block streams by)
+
+Outputs per token:  logprob = g − (m + log l),  entropy = (m + log l) − t/l.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(logits_ref, target_ref, lp_ref, ent_ref, m_ref, l_ref, t_ref,
+            g_ref, *, block_v, num_v_blocks):
+    jv = pl.program_id(1)
+
+    @pl.when(jv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = logits_ref[...].astype(jnp.float32)          # (BN, BV)
+    tgt = target_ref[...]                            # (BN,)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, x.max(-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(x - m_new[:, None])
+    l_ref[...] = alpha * l_ref[...] + p.sum(-1)
+    t_ref[...] = alpha * t_ref[...] + (p * x).sum(-1)
+    m_ref[...] = m_new
+
+    # pick up the target logit if it lives in this vocab block
+    v0 = jv * block_v
+    local = tgt - v0
+    in_block = (local >= 0) & (local < block_v)
+    idx = jnp.clip(local, 0, block_v - 1)
+    picked = jnp.take_along_axis(x, idx[:, None], axis=1)[:, 0]
+    g_ref[...] = jnp.where(in_block, picked, g_ref[...])
+
+    @pl.when(jv == num_v_blocks - 1)
+    def _finish():
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        lp_ref[...] = (g_ref[...] - lse).astype(lp_ref.dtype)
+        ent_ref[...] = (lse - t_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                        ).astype(ent_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_v",
+                                             "interpret"))
+def grpo_logprob_kernel(logits, targets, *, block_n=256, block_v=2048,
+                        interpret=False):
+    """logits: (N, V); targets: (N,) int32 -> (logprob (N,), entropy (N,))."""
+    N, V = logits.shape
+    block_n = min(block_n, N)
+    block_v = min(block_v, V)
+    assert N % block_n == 0 and V % block_v == 0
+    nn, nv = N // block_n, V // block_v
+
+    kernel = functools.partial(_kernel, block_v=block_v, num_v_blocks=nv)
+    lp, ent = pl.pallas_call(
+        kernel,
+        grid=(nn, nv),
+        in_specs=[
+            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.float32),
+                   jax.ShapeDtypeStruct((N,), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((block_n,), jnp.float32),
+            pltpu.VMEM((block_n,), jnp.float32),
+            pltpu.VMEM((block_n,), jnp.float32),
+            pltpu.VMEM((block_n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, targets)
+    return lp, ent

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for grpo_logprob."""
+import jax
+import jax.numpy as jnp
+
+
+def grpo_logprob_ref(logits, targets):
+    """logits: (N, V); targets: (N,) -> (logprob (N,), entropy (N,))."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lp = jnp.take_along_axis(logp, targets[:, None], axis=1)[:, 0]
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return lp, ent

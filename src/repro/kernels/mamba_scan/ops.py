@@ -1,0 +1,14 @@
+"""jit'd wrapper for the mamba selective-scan kernel."""
+import jax
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan_kernel
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+def mamba_scan(x, dt, a, b, c, *, block_s=128, block_d=128):
+    B, S, D = x.shape
+    bs, bd = min(block_s, S), min(block_d, D)
+    if S % bs or D % bd:
+        return mamba_scan_ref(x, dt, a, b, c)
+    return mamba_scan_kernel(x, dt, a, b, c, block_s=bs, block_d=bd,
+                             interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: sequential selective scan."""
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, a, b, c):
+    """x, dt: (B,S,D); a: (D,N); b,c: (B,S,N) -> y (B,S,D) float32."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[:, :, None] * af[None])          # (B,D,N)
+        h = da * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    B, S, D = x.shape
+    h0 = jnp.zeros((B, D, af.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(xf, 1, 0),
+                                    jnp.moveaxis(dtf, 1, 0),
+                                    jnp.moveaxis(bf, 1, 0),
+                                    jnp.moveaxis(cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,4 @@
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+__all__ = ["rglru_scan", "rglru_scan_ref"]

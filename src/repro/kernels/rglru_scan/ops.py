@@ -1,0 +1,15 @@
+"""jit'd wrapper for the RG-LRU scan kernel."""
+import jax
+
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan_kernel
+
+
+def rglru_scan(a, b, *, block_s=256, block_w=128):
+    B, S, W = a.shape
+    bs, bw = min(block_s, S), min(block_w, W)
+    if S % bs or W % bw:
+        return rglru_scan_ref(a, b)
+    return rglru_scan_kernel(a.astype("float32"), b.astype("float32"),
+                             block_s=bs, block_w=bw,
+                             interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: sequential linear recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a, b: (B, S, W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    h0 = jnp.zeros_like(a_t[0])
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,66 @@
+"""RG-LRU linear recurrence — Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t   (elementwise over the width dim)
+
+TPU adaptation: instead of a strictly sequential time loop (poor VPU
+utilization), the sequence is blocked (BS timesteps per block); inside a
+block we run a *log-depth associative scan* on (a, b) pairs, then splice in
+the carried state h via  h_t = P_t * h_carry + S_t  where P_t is the
+cumulative product of a. The carry lives in VMEM scratch across the
+sequential time-block grid dim; the width dim is blocked to 128-lane
+vector registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h_out_ref, carry_ref):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0].astype(jnp.float32)    # (BS, BW)
+    b = b_ref[0].astype(jnp.float32)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    prod_a, s = jax.lax.associative_scan(comb, (a, b), axis=0)
+    h = s + prod_a * carry_ref[...][None, :]
+    h_out_ref[0] = h.astype(h_out_ref.dtype)
+    carry_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w",
+                                             "interpret"))
+def rglru_scan_kernel(a, b, *, block_s=256, block_w=128, interpret=False):
+    """a, b: (B, S, W) float32 -> h: (B, S, W) float32."""
+    B, S, W = a.shape
+    block_s = min(block_s, S)
+    block_w = min(block_w, W)
+    assert S % block_s == 0 and W % block_w == 0
+    ns, nw = S // block_s, W // block_w
+
+    return pl.pallas_call(
+        _rglru_kernel,
+        grid=(B, nw, ns),  # trailing dim (time blocks) is sequential
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_w), lambda b_, w_, s_: (b_, s_, w_)),
+            pl.BlockSpec((1, block_s, block_w), lambda b_, w_, s_: (b_, s_, w_)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_w),
+                               lambda b_, w_, s_: (b_, s_, w_)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

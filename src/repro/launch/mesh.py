@@ -1,0 +1,23 @@
+"""Production mesh builders.
+
+A function (not module-level constant) so importing never touches jax
+device state. Single pod: 16x16 = 256 chips (data x model). Multi-pod:
+2 x 16 x 16 = 512 chips with a leading pure-DP "pod" axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, pod: int = 0):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,86 @@
+"""input_specs — ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, zero allocation).
+
+One entry point per step kind; shapes come from the assigned INPUT_SHAPES
+table. Audio/VLM modality frontends are stubs: ``frames`` /
+``vision_embeds`` arrive as precomputed embeddings of the right shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.models import init_cache, init_params
+from repro.models.layers import dtype_of
+from repro.models.model import decode_window
+from repro.training.train_state import TrainState
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def state_struct(cfg: ModelConfig):
+    p = params_struct(cfg)
+    return jax.eval_shape(TrainState.create, p)
+
+
+def train_specs(cfg: ModelConfig, shape_name: str = "train_4k"):
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "response_mask": _sds((B, S), jnp.float32),
+        "old_logprob": _sds((B, S), jnp.float32),
+        "advantage": _sds((B,), jnp.float32),
+    }
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.arch_type == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model), cd)
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model), cd)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape_name: str = "prefill_32k"):
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.arch_type == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model), cd)
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model), cd)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape_name: str):
+    """(cache, token, pos) structs; cache length follows decode_window
+    (sliding-window ring for dense long_500k)."""
+    shp = INPUT_SHAPES[shape_name]
+    B = shp.global_batch
+    length, ring = decode_window(cfg, shape_name)
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, length))
+    token = _sds((B,), jnp.int32)
+    pos = _sds((B,), jnp.int32)
+    return cache, token, pos, ring
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Unified: returns (kind, specs_dict)."""
+    kind = INPUT_SHAPES[shape_name].kind
+    if kind == "train":
+        return kind, {"batch": train_specs(cfg, shape_name)}
+    if kind == "prefill":
+        return kind, {"batch": prefill_specs(cfg, shape_name)}
+    cache, token, pos, ring = decode_specs(cfg, shape_name)
+    return kind, {"cache": cache, "token": token, "pos": pos, "ring": ring}

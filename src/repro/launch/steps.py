@@ -1,0 +1,57 @@
+"""The three production step functions every architecture lowers:
+
+  train_step   — GRPO actor update (fwd + clipped policy loss + bwd + AdamW)
+  prefill_step — rollout prefill: full-sequence forward building the KV cache
+  serve_step   — one-token decode against a seq_len cache
+
+These are what the dry-run lowers for every (arch x input-shape x mesh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward
+from repro.rl.grpo import GRPOConfig, grpo_loss_fn
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_state import TrainState
+
+
+def make_train_step(cfg, rl: GRPOConfig = None,
+                    opt_cfg: OptimizerConfig = None):
+    rl = rl or GRPOConfig()
+    opt_cfg = opt_cfg or OptimizerConfig()
+
+    def train_step(state: TrainState, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            grpo_loss_fn, has_aux=True)(state.params, cfg, batch, rl)
+        new_state, gnorm = state.apply_gradients(grads, opt_cfg)
+        metrics["grad_norm"] = gnorm
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    """Returns (last-token logits, cache-or-None)."""
+    want_cache = cfg.arch_type not in ("ssm",)
+
+    def prefill_step(params, batch):
+        out = forward(params, cfg, batch, return_cache=want_cache)
+        if want_cache:
+            logits, aux, cache = out
+        else:
+            logits, aux = out
+            cache = None
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, ring: bool = False):
+    def serve_step(params, cache, token, pos):
+        return decode_step(params, cfg, cache, token, pos, ring=ring)
+
+    return serve_step

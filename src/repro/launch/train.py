@@ -1,0 +1,70 @@
+"""End-to-end training launcher.
+
+CPU container: runs the full AsyncFlow GRPO post-training workflow on a
+reduced architecture (real rollout + real updates through TransferQueue).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_5_7b \
+      --mode async --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_5_7b")
+    ap.add_argument("--mode", default="async",
+                    choices=["baseline", "streaming", "async"])
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--prompts-per-step", type=int, default=4)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--rollout-workers", type=int, default=2)
+    ap.add_argument("--max-new-tokens", type=int, default=6)
+    ap.add_argument("--staleness", type=int, default=1)
+    ap.add_argument("--staggered", action="store_true",
+                    help="sub-step async weight updates (Fig. 8d)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="partial rollout chunk size (0 = off)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "token_balance"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--gantt", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.api import Trainer, TrainerConfig
+
+    tcfg = TrainerConfig(
+        arch=args.arch, mode=args.mode, num_steps=args.steps,
+        prompts_per_step=args.prompts_per_step, group_size=args.group_size,
+        rollout_workers=args.rollout_workers,
+        max_new_tokens=args.max_new_tokens, staleness=args.staleness,
+        staggered=args.staggered, policy=args.policy, lr=args.lr,
+        seed=args.seed, chunk_tokens=args.chunk_tokens)
+    result = Trainer(tcfg).fit()
+
+    summary = {
+        "mode": args.mode, "arch": args.arch,
+        "wall_time_s": round(result.wall_time_s, 3),
+        "throughput_samples_per_s": round(result.throughput, 2),
+        "max_staleness": max(result.staleness_seen),
+        "mean_reward_last": result.metrics[-1].get("mean_reward")
+        if result.metrics else None,
+        "bubble_fraction": {k: round(v, 3)
+                            for k, v in result.bubble_fraction.items()},
+    }
+    print(json.dumps(summary, indent=1))
+    if args.gantt:
+        print(result.log.render_gantt())
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({**summary, "metrics": result.metrics}, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

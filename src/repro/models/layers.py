@@ -1,0 +1,126 @@
+"""Common neural-net building blocks (pure JAX, params = nested dicts).
+
+Conventions:
+  * ``init_<layer>(key, ...) -> params`` and ``<layer>(params, x, ...) -> y``.
+  * Params are stored in ``param_dtype`` (fp32 by default); compute runs in
+    ``compute_dtype`` (bf16) — matmuls cast inputs, accumulate fp32 where it
+    matters (attention softmax, norms, losses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# -- initializers -----------------------------------------------------------
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+# -- dense ------------------------------------------------------------------
+
+def init_dense(key, d_in, d_out, *, bias=False, scale=0.02, dtype=jnp.float32):
+    p = {"w": normal_init(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = zeros_init((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype),
+                   p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# -- norms --------------------------------------------------------------------
+
+def init_norm(kind, d, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- activations --------------------------------------------------------------
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# -- MLP (SwiGLU for silu, plain 2-layer for gelu) ----------------------------
+
+def init_mlp(key, d_model, d_ff, activation, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], d_model, d_ff, dtype=dtype),
+         "down": init_dense(ks[1], d_ff, d_model, dtype=dtype)}
+    if activation == "silu":
+        p["gate"] = init_dense(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp(p, x, activation, compute_dtype=jnp.bfloat16):
+    f = act_fn(activation)
+    h = dense(p["up"], x, compute_dtype)
+    if "gate" in p:
+        h = h * f(dense(p["gate"], x, compute_dtype))
+    else:
+        h = f(h)
+    return dense(p["down"], h, compute_dtype)
+
+
+# -- rotary -------------------------------------------------------------------
+
+def rotary_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rotary(x, positions, theta=10_000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rotary_freqs(hd, theta))  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- embeddings ---------------------------------------------------------------
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(p, x, compute_dtype=jnp.bfloat16):
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      p["table"].astype(compute_dtype))

@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+KV is compressed into a per-token latent ``c_kv`` (kv_lora_rank) plus a
+shared rope key; the cache stores only the latent — this is what makes the
+decode_32k / long_500k shapes feasible for these architectures.
+
+Decode uses the *absorbed* formulation: W_uk is folded into the query and
+W_uv applied after attention, so per-step cost is O(S · r) instead of
+O(S · nh · hd) and the expanded K/V are never materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rotary, dense, init_dense
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d, nh = cfg.d_model, cfg.num_heads
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dr, dn, dv = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    p = {
+        "w_dkv": init_dense(ks[0], d, r, dtype=dtype),
+        "w_krope": init_dense(ks[1], d, dr, dtype=dtype),
+        "w_uk": init_dense(ks[2], r, nh * dn, dtype=dtype),
+        "w_uv": init_dense(ks[3], r, nh * dv, dtype=dtype),
+        "wo": init_dense(ks[4], nh * dv, d, dtype=dtype),
+    }
+    q_dim = nh * (dn + dr)
+    if qr:
+        p["w_dq"] = init_dense(ks[5], d, qr, dtype=dtype)
+        p["w_uq"] = init_dense(ks[6], qr, q_dim, dtype=dtype)
+    else:
+        p["w_q"] = init_dense(ks[5], d, q_dim, dtype=dtype)
+    return p
+
+
+def _queries(p, x, cfg, positions):
+    nh = cfg.num_heads
+    dr, dn = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim
+    if "w_dq" in p:
+        q = dense(p["w_uq"], dense(p["w_dq"], x, x.dtype), x.dtype)
+    else:
+        q = dense(p["w_q"], x, x.dtype)
+    q = q.reshape(x.shape[:-1] + (nh, dn + dr))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rotary(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(p, x, cfg, positions=None, *, window=0):
+    """Training / prefill MLA over a full sequence (naive expansion)."""
+    B, S, _ = x.shape
+    nh = cfg.num_heads
+    dr, dn, dv = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+
+    c_kv = dense(p["w_dkv"], x, x.dtype)                       # (B,S,r)
+    k_rope = dense(p["w_krope"], x, x.dtype)[..., None, :]     # (B,S,1,dr)
+    k_rope = apply_rotary(k_rope, positions, cfg.rope_theta)
+    k_nope = dense(p["w_uk"], c_kv, x.dtype).reshape(B, S, nh, dn)
+    v = dense(p["w_uv"], c_kv, x.dtype).reshape(B, S, nh, dv)
+
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope[..., 0, :]))
+    scores = scores.astype(jnp.float32) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    scores = jnp.where(m[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return dense(p["wo"], out.reshape(B, S, nh * dv), x.dtype)
+
+
+def init_mla_cache(cfg, batch, length, dtype=jnp.bfloat16, layers=None):
+    L = cfg.num_layers if layers is None else layers
+    return {
+        "c_kv": jnp.zeros((L, batch, length, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((L, batch, length, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, layer_cache, pos, cfg, *, ring=False):
+    """One-token absorbed-MLA decode against the latent cache."""
+    B = x.shape[0]
+    nh = cfg.num_heads
+    dr, dn, dv = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    cd = x.dtype
+
+    q_nope, q_rope = _queries(p, x, cfg, pos[:, None])  # (B,1,nh,·)
+
+    c_new = dense(p["w_dkv"], x, cd)                     # (B,1,r)
+    kr_new = dense(p["w_krope"], x, cd)[..., None, :]
+    kr_new = apply_rotary(kr_new, pos[:, None], cfg.rope_theta)[..., 0, :]
+
+    ck, kr = layer_cache["c_kv"], layer_cache["k_rope"]
+    S = ck.shape[1]
+    slot = pos % S if ring else jnp.minimum(pos, S - 1)
+    bidx = jnp.arange(B)
+    ck = ck.at[bidx, slot].set(c_new[:, 0].astype(ck.dtype))
+    kr = kr.at[bidx, slot].set(kr_new[:, 0].astype(kr.dtype))
+
+    # absorb: q_eff[h] = q_nope[h] @ W_uk[h]^T  -> latent space
+    w_uk = p["w_uk"]["w"].reshape(r, nh, dn).astype(cd)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)   # (B,1,nh,r)
+
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat, ck.astype(cd))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, kr.astype(cd)))
+    scores = scores.astype(jnp.float32) * scale
+
+    kpos = jnp.arange(S)[None, :]
+    n_filled = jnp.minimum(pos + 1, S)[:, None]
+    valid = kpos < n_filled if ring else kpos <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(cd)
+
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", w, ck.astype(cd))  # (B,1,nh,r)
+    w_uv = p["w_uv"]["w"].reshape(r, nh, dv).astype(cd)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv)
+    out = dense(p["wo"], out.reshape(B, 1, nh * dv), cd)
+    return out, {"c_kv": ck, "k_rope": kr}

@@ -1,0 +1,74 @@
+"""Unified model facade — every assigned architecture behind one API.
+
+    params = init_params(key, cfg)
+    logits, aux = forward(params, cfg, batch)              # train/prefill
+    logits, cache = decode_step(params, cfg, cache, token, pos)
+
+``batch`` is a dict: tokens (B,S) plus modality extras
+(``frames`` for audio, ``vision_embeds`` for vlm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.layers import dtype_of
+
+
+def init_params(key, cfg):
+    if cfg.arch_type == "audio":
+        return encdec.init_encdec(key, cfg)
+    return transformer.init_lm(key, cfg)
+
+
+def forward(params, cfg, batch, *, window=0, use_pallas=False,
+            return_cache=False):
+    """Full-sequence forward. Returns (logits, aux[, cache])."""
+    tokens = batch["tokens"]
+    if cfg.arch_type == "audio":
+        memory = encdec.encode(params, cfg, batch["frames"])
+        logits, aux, cache = encdec.decode_train(params, cfg, memory, tokens)
+    elif cfg.arch_type == "vlm":
+        logits, aux, cache = transformer.forward_lm(
+            params, cfg, tokens, extra_embeds=batch.get("vision_embeds"),
+            window=window, use_pallas=use_pallas, return_cache=return_cache)
+    else:
+        logits, aux, cache = transformer.forward_lm(
+            params, cfg, tokens, window=window, use_pallas=use_pallas,
+            return_cache=return_cache)
+    if return_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def init_cache(cfg, batch_size, length, dtype=jnp.bfloat16):
+    if cfg.arch_type == "audio":
+        return encdec.init_dec_cache(cfg, batch_size, length, dtype)
+    return transformer.init_cache(cfg, batch_size, length, dtype)
+
+
+def decode_step(params, cfg, cache, token, pos, *, ring=False):
+    """One-token decode. token/pos: (B,). Returns (logits (B,V), cache)."""
+    if cfg.arch_type == "audio":
+        return encdec.decode_step(params, cfg, cache, token, pos)
+    return transformer.decode_lm(params, cfg, cache, token, pos, ring=ring)
+
+
+def decode_window(cfg, shape_name: str) -> tuple[int, bool]:
+    """(cache length, ring?) policy for a decode input shape.
+
+    long_500k on dense archs uses the sliding-window variant
+    (cfg.long_context_window ring buffer) — see DESIGN.md §4.
+    """
+    from repro.configs.base import INPUT_SHAPES
+    shp = INPUT_SHAPES[shape_name]
+    if cfg.arch_type == "ssm":
+        return 1, False  # state caches carry no seq dim; length unused
+    if shp.name == "long_500k" and cfg.arch_type not in ("hybrid",):
+        return cfg.long_context_window, True
+    return shp.seq_len, False
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

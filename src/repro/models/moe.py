@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Dispatch is sort-based with per-expert capacity buffers (no (N,E,C) one-hot
+— that would be O(N·E·C) memory). Under GSPMD the expert buffer is
+annotated so that:
+  * ``num_experts % model_axis == 0`` → experts sharded over "model"
+    (expert parallelism; XLA inserts the all-to-all-equivalent collectives);
+  * otherwise → expert FFN hidden dim sharded over "model" (tensor-parallel
+    experts, Megatron-style), buffer sharded over "data".
+
+A router load-balance auxiliary loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn, dense, init_dense, init_mlp, mlp
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, E, dff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    mult = 3 if cfg.activation == "silu" else 2
+    kw = jax.random.split(ks[0], mult)
+    experts = {
+        "up": (0.02 * jax.random.normal(kw[0], (E, d, dff))).astype(dtype),
+        "down": (0.02 * jax.random.normal(kw[1], (E, dff, d))).astype(dtype),
+    }
+    if mult == 3:
+        experts["gate"] = (0.02 * jax.random.normal(kw[2], (E, d, dff))).astype(dtype)
+    p = {"router": init_dense(ks[1], d, E, dtype=dtype), "experts": experts}
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[2], d, cfg.num_shared_experts * cfg.moe_d_ff,
+                               cfg.activation, dtype=dtype)
+    return p
+
+
+def _expert_ffn(experts, buf, activation, cd):
+    """buf: (E, C, d) -> (E, C, d)."""
+    f = act_fn(activation)
+    h = jnp.einsum("ecd,edf->ecf", buf, experts["up"].astype(cd))
+    if "gate" in experts:
+        h = h * f(jnp.einsum("ecd,edf->ecf", buf, experts["gate"].astype(cd)))
+    else:
+        h = f(h)
+    return jnp.einsum("ecf,efd->ecd", h, experts["down"].astype(cd))
+
+
+def moe_ffn(p, x, cfg, *, capacity_factor=1.25, shard_experts=None):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    shard_experts: optional callable applied to the (E, C, d) buffers to add
+    a sharding constraint (wired in repro.distributed.sharding).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    cd = x.dtype
+    N = B * S
+    xf = x.reshape(N, d)
+
+    logits = dense(p["router"], xf, cd).astype(jnp.float32)     # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    if cfg.moe_device_limit and cfg.num_experts % cfg.moe_ep_degree == 0 \
+            and cfg.moe_device_limit < cfg.moe_ep_degree:
+        # device-limited routing (DeepSeek-V2 §2.1.2, our §Perf HC4):
+        # each token may select experts from at most M device groups,
+        # bounding its all-to-all fan-out to M instead of top_k.
+        G = cfg.moe_ep_degree
+        epg = cfg.num_experts // G
+        group_score = probs.reshape(N, G, epg).max(-1)          # (N, G)
+        _, top_groups = jax.lax.top_k(group_score, cfg.moe_device_limit)
+        group_mask = jnp.zeros((N, G), bool).at[
+            jnp.arange(N)[:, None], top_groups].set(True)
+        probs = jnp.where(
+            jnp.repeat(group_mask, epg, axis=1), probs, 0.0)
+
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (N, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # Switch-style load-balance aux loss.
+    me = probs.mean(0)                                          # (E,)
+    ce = jnp.zeros(E).at[expert_ids.reshape(-1)].add(1.0) / (N * k)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    # ---- sort-based dispatch --------------------------------------------
+    C = int(max(1, round(N * k / E * capacity_factor)))
+    flat_ids = expert_ids.reshape(-1)                           # (N*k,)
+    order = jnp.argsort(flat_ids)                               # stable
+    sorted_ids = flat_ids[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(E))        # (E,)
+    pos_in_expert = jnp.arange(N * k) - starts[sorted_ids]
+    keep = pos_in_expert < C
+
+    token_of = order // k                                       # source token
+    buf = jnp.zeros((E, C, d), cd)
+    buf = buf.at[sorted_ids, jnp.where(keep, pos_in_expert, 0)].add(
+        jnp.where(keep[:, None], xf[token_of], jnp.zeros((), cd)))
+    if shard_experts is not None:
+        buf = shard_experts(buf)
+
+    out_buf = _expert_ffn(p["experts"], buf, cfg.activation, cd)
+    if shard_experts is not None:
+        out_buf = shard_experts(out_buf)
+
+    # ---- combine ----------------------------------------------------------
+    gathered = out_buf[sorted_ids, jnp.where(keep, pos_in_expert, 0)]
+    gathered = jnp.where(keep[:, None], gathered, jnp.zeros((), cd))
+    w = gate_vals.reshape(-1)[order][:, None].astype(cd)
+    y = jnp.zeros((N, d), cd).at[token_of].add(gathered * w)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf, cfg.activation, cd)
+    return y.reshape(B, S, d), aux
+
+
+@dataclasses.dataclass
+class MoEStats:
+    """Router statistics for load-balance monitoring (paper §3.3 load
+    balancing feeds on per-DP-group token counts)."""
+    tokens_per_expert: jnp.ndarray
+    dropped_fraction: jnp.ndarray
+
+
+def moe_router_stats(p, x, cfg, capacity_factor=1.25) -> MoEStats:
+    B, S, d = x.shape
+    N, E, k = B * S, cfg.num_experts, cfg.top_k
+    logits = dense(p["router"], x.reshape(N, d), x.dtype).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    _, expert_ids = jax.lax.top_k(probs, k)
+    counts = jnp.zeros(E).at[expert_ids.reshape(-1)].add(1.0)
+    C = int(max(1, round(N * k / E * capacity_factor)))
+    dropped = jnp.maximum(counts - C, 0.0).sum() / (N * k)
+    return MoEStats(counts, dropped)

@@ -1,0 +1,100 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block wraps the RG-LRU with an input projection producing (x, gate z),
+a short causal temporal conv on the x branch, and an output projection
+gated by gelu(z) — per the Griffin recurrent block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def init_rglru_block(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    d, w = cfg.d_model, cfg.rnn_width
+    # Lambda init so that a in [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[3], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "in_x": init_dense(ks[0], d, w, dtype=dtype),
+        "in_z": init_dense(ks[1], d, w, dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (4, w))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": init_dense(ks[4], w, w, dtype=dtype),
+        "gate_x": init_dense(jax.random.fold_in(key, 7), w, w, dtype=dtype),
+        "lambda": lam.astype(dtype),
+        "out": init_dense(jax.random.fold_in(key, 9), w, d, dtype=dtype),
+    }
+
+
+def _gates(p, xc, cd):
+    r = jax.nn.sigmoid(dense(p["gate_a"], xc, cd).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["gate_x"], xc, cd).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * xc.astype(jnp.float32)
+
+
+def _conv(p, x, decode_buf=None):
+    """Causal temporal conv, kernel 4. x: (B,S,w)."""
+    k = p["conv_w"].shape[0]
+    if decode_buf is None:
+        xpad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(xpad[:, i:i + x.shape[1], :] * p["conv_w"][i].astype(x.dtype)
+                  for i in range(k))
+        return out + p["conv_b"].astype(x.dtype), None
+    window = jnp.concatenate([decode_buf, x.astype(decode_buf.dtype)], axis=1)
+    out = jnp.einsum("bkd,kd->bd", window.astype(x.dtype),
+                     p["conv_w"].astype(x.dtype))[:, None, :]
+    return out + p["conv_b"].astype(x.dtype), window[:, 1:, :]
+
+
+def rglru_full(p, x, cfg, use_pallas=False):
+    """x: (B,S,d) -> (B,S,d)."""
+    cd = x.dtype
+    xb = dense(p["in_x"], x, cd)
+    z = dense(p["in_z"], x, cd)
+    xc, _ = _conv(p, xb)
+    a, bx = _gates(p, xc, cd)
+
+    if use_pallas:
+        from repro.kernels.rglru_scan.ops import rglru_scan
+        h = rglru_scan(a, bx)
+    else:
+        def comb(l, r):
+            (al, hl), (ar, hr) = l, r
+            return al * ar, hr + ar * hl
+        _, h = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    y = h.astype(cd) * jax.nn.gelu(z)
+    return dense(p["out"], y, cd)
+
+
+def init_rglru_cache(cfg, batch, n_layers, dtype=jnp.float32):
+    w = cfg.rnn_width
+    return {"h": jnp.zeros((n_layers, batch, w), dtype),
+            "conv": jnp.zeros((n_layers, batch, 3, w), dtype)}
+
+
+def rglru_decode(p, x, layer_cache, cfg):
+    """One-step. x: (B,1,d)."""
+    cd = x.dtype
+    xb = dense(p["in_x"], x, cd)
+    z = dense(p["in_z"], x, cd)
+    xc, new_conv = _conv(p, xb, decode_buf=layer_cache["conv"])
+    a, bx = _gates(p, xc, cd)                                # (B,1,w)
+    h = a[:, 0] * layer_cache["h"] + bx[:, 0]
+    y = h[:, None, :].astype(cd) * jax.nn.gelu(z)
+    out = dense(p["out"], y, cd)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,143 @@
+"""Mamba-1 selective-scan SSM block (Falcon-Mamba).
+
+Full-sequence path uses an associative scan over time (the Pallas
+``mamba_scan`` kernel is the TPU-optimized version); decode keeps an
+O(1)-size recurrent state ``(h, conv window)`` — this is why the ssm arch
+runs long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, kc = cfg.ssm_dt_rank, cfg.ssm_conv
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (kc, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": init_dense(ks[2], di, dtr + 2 * ds, dtype=dtype),
+        "dt_proj": {"w": (0.1 * jax.random.normal(ks[3], (dtr, di))).astype(dtype),
+                    "b": jnp.full((di,), -4.6, dtype)},  # softplus^-1(0.01)
+        "a_log": jnp.log(a).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": init_dense(ks[4], di, d, dtype=dtype),
+    }
+
+
+def _ssm_params(p, x_inner, cfg, cd):
+    """Per-timestep dt, B, C from x_inner (..., di)."""
+    ds, dtr = cfg.ssm_state, cfg.ssm_dt_rank
+    dbc = dense(p["x_proj"], x_inner, cd)
+    dt_r, b, c = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_r.astype(jnp.float32),
+                   p["dt_proj"]["w"].astype(jnp.float32))
+        + p["dt_proj"]["b"].astype(jnp.float32))            # (..., di)
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(p, x, cfg):
+    """Depthwise causal conv over seq. x: (B,S,di)."""
+    kc = cfg.ssm_conv
+    xpad = jnp.pad(x, ((0, 0), (kc - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(x.dtype)                          # (kc, di)
+    out = sum(xpad[:, i:i + x.shape[1], :] * w[i] for i in range(kc))
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def mamba_full(p, x, cfg, use_pallas=False, chunk: int = 0):
+    """x: (B,S,d) -> (B,S,d).
+
+    chunk > 0 enables the chunked scan (the Pallas kernel's TPU algorithm
+    in pure JAX): a sequential lax.scan over S/chunk blocks with a
+    log-depth associative scan inside each block. Peak intermediate memory
+    drops from O(B·S·di·ds) to O(B·chunk·di·ds) — the §Perf fix for the
+    train_4k memory blow-up on SSM archs.
+    """
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    cd = x.dtype
+    xz = dense(p["in_proj"], x, cd)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = jax.nn.silu(_causal_conv(p, x_in, cfg))
+
+    dt, b, c = _ssm_params(p, x_in, cfg, cd)                 # (B,S,di),(B,S,ds)x2
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))             # (di,ds)
+
+    def comb(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, br + ar * bl
+
+    if use_pallas:
+        from repro.kernels.mamba_scan.ops import mamba_scan
+        y = mamba_scan(x_in.astype(jnp.float32), dt, a, b, c)
+    elif chunk and S % chunk == 0 and S > chunk:
+        nc = S // chunk
+        xf = x_in.astype(jnp.float32)
+
+        @jax.checkpoint  # backward recomputes the (B,C,di,ds) tensors —
+        def body(h_carry, inp):  # peak memory is ONE chunk, not the full S
+            xt, dtt, bt, ct = inp                            # (B,C,·)
+            da = jnp.exp(dtt[..., None] * a)                 # (B,C,di,ds)
+            dbx = (dtt * xt)[..., None] * bt[:, :, None, :]
+            prod, s = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+            h = s + prod * h_carry[:, None]
+            yt = jnp.einsum("bcdn,bcn->bcd", h, ct)
+            return h[:, -1], yt
+
+        resh = lambda t: jnp.moveaxis(
+            t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        _, ys = jax.lax.scan(body, h0,
+                             (resh(xf), resh(dt), resh(b), resh(c)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    else:
+        # associative scan: h_t = da_t * h_{t-1} + dbx_t
+        da = jnp.exp(dt[..., None] * a)                      # (B,S,di,ds)
+        dbx = (dt * x_in.astype(jnp.float32))[..., None] * b[:, :, None, :]
+        _, h = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", h, c)
+    y = y + x_in.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    return dense(p["out_proj"], y, cd)
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32, layers=None):
+    L = cfg.num_layers if layers is None else layers
+    di, ds, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"h": jnp.zeros((L, batch, di, ds), dtype),
+            "conv": jnp.zeros((L, batch, kc - 1, di), dtype)}
+
+
+def mamba_decode(p, x, layer_cache, cfg):
+    """One-step recurrence. x: (B,1,d)."""
+    B = x.shape[0]
+    cd = x.dtype
+    kc = cfg.ssm_conv
+    xz = dense(p["in_proj"], x, cd)
+    x_in, z = jnp.split(xz, 2, axis=-1)                      # (B,1,di)
+
+    conv_buf = layer_cache["conv"]                           # (B,kc-1,di)
+    window = jnp.concatenate([conv_buf, x_in.astype(conv_buf.dtype)], axis=1)
+    w = p["conv_w"].astype(cd)
+    x_c = jnp.einsum("bkd,kd->bd", window.astype(cd), w) + p["conv_b"].astype(cd)
+    x_c = jax.nn.silu(x_c)[:, None, :]                       # (B,1,di)
+    new_conv = window[:, 1:, :]
+
+    dt, b, c = _ssm_params(p, x_c, cfg, cd)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :, None] * a)                      # (B,di,ds)
+    dbx = (dt[:, 0] * x_c[:, 0].astype(jnp.float32))[..., None] * b[:, 0, None, :]
+    h = da * layer_cache["h"] + dbx                          # (B,di,ds)
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])
+    y = y + x_c[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y[:, None, :].astype(cd)) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y, cd)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,479 @@
+"""Decoder-only LM assembly for dense / moe / ssm / hybrid / vlm families.
+
+Layer stacks are homogeneous pytrees with a leading layer axis, iterated
+with ``jax.lax.scan`` — this keeps the HLO (and dry-run compile time) small
+for 60+-layer models. The hybrid (Griffin) family scans over
+(recurrent, recurrent, attention) tiles.
+
+Every forward returns ``(logits, aux)`` where aux carries the MoE
+load-balance loss (0 otherwise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dtype_of, embed, init_embedding, init_mlp,
+                                 init_norm, mlp, norm, unembed, init_dense,
+                                 dense)
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg, ffn_kind):
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg.param_dtype)
+    if cfg.attention == "mla":
+        a = mla_mod.init_mla(ks[0], cfg, dt)
+    else:
+        a = attn.init_attention(ks[0], cfg, dt)
+    p = {"ln1": init_norm(cfg.norm, cfg.d_model, dt), "attn": a,
+         "ln2": init_norm(cfg.norm, cfg.d_model, dt)}
+    if ffn_kind == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg, dt)
+    else:
+        p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def _attn_block_full(p, x, cfg, ffn_kind, *, window, use_pallas, positions,
+                     return_kv):
+    h = norm(p["ln1"], x)
+    if cfg.attention == "mla":
+        y = mla_mod.mla_full(p["attn"], h, cfg, positions, window=window)
+        kv = None
+        if return_kv:
+            cd = x.dtype
+            c_kv = dense(p["attn"]["w_dkv"], h, cd)
+            k_rope = dense(p["attn"]["w_krope"], h, cd)[..., None, :]
+            from repro.models.layers import apply_rotary
+            pos = positions if positions is not None else jnp.arange(x.shape[1])[None, :]
+            k_rope = apply_rotary(k_rope, pos, cfg.rope_theta)[..., 0, :]
+            kv = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        y = attn.attend_full(p["attn"], h, cfg, positions, window=window,
+                             use_pallas=use_pallas)
+        kv = None
+        if return_kv:
+            k, v = attn.project_cross_kv(p["attn"], h, cfg)
+            from repro.models.layers import apply_rotary
+            pos = positions if positions is not None else jnp.arange(x.shape[1])[None, :]
+            k = apply_rotary(k, pos, cfg.rope_theta)
+            kv = {"k": k, "v": v}
+    x = x + y
+    h = norm(p["ln2"], x)
+    if ffn_kind == "moe":
+        y, aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
+    else:
+        y, aux = mlp(p["ffn"], h, cfg.activation, x.dtype), 0.0
+    return x + y, aux, kv
+
+
+def _attn_block_decode(p, x, layer_cache, pos, cfg, ffn_kind, *, ring):
+    h = norm(p["ln1"], x)
+    if cfg.attention == "mla":
+        y, new_cache = mla_mod.mla_decode(p["attn"], h, layer_cache, pos, cfg,
+                                          ring=ring)
+    else:
+        y, new_cache = attn.attend_decode(p["attn"], h, layer_cache, pos, cfg,
+                                          ring=ring)
+    x = x + y
+    h = norm(p["ln2"], x)
+    if ffn_kind == "moe":
+        y, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
+    else:
+        y = mlp(p["ffn"], h, cfg.activation, x.dtype)
+    return x + y, new_cache
+
+
+def _init_mamba_block(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    return {"ln": init_norm(cfg.norm, cfg.d_model, dt),
+            "mamba": ssm_mod.init_mamba(key, cfg, dt)}
+
+
+def _init_rec_block(key, cfg):
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg.norm, cfg.d_model, dt),
+            "rec": rglru_mod.init_rglru_block(ks[0], cfg, dt),
+            "ln2": init_norm(cfg.norm, cfg.d_model, dt),
+            "ffn": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)}
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg):
+    """Parameters for any decoder-only family in the zoo."""
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params = {"embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dt),
+              "final_norm": init_norm(cfg.norm, cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(ks[1], cfg.d_model, cfg.vocab_size, dtype=dt)
+
+    L = cfg.num_layers
+    if cfg.arch_type == "ssm":
+        params["blocks"] = _stack_init(lambda k: _init_mamba_block(k, cfg), ks[2], L)
+    elif cfg.arch_type == "hybrid":
+        pat = cfg.rglru_block_pattern
+        n_tiles, rem = divmod(L, len(pat))
+        if n_tiles:
+            tile = {}
+            for i, kind in enumerate(pat):
+                fn = (lambda k: _init_rec_block(k, cfg)) if kind == "recurrent" \
+                    else (lambda k: _init_attn_block(k, cfg, "dense"))
+                tile[f"{i}_{kind}"] = _stack_init(
+                    fn, jax.random.fold_in(ks[2], i), n_tiles)
+            params["tiles"] = tile
+        if rem:
+            rem_blocks = []
+            for i in range(rem):
+                kind = pat[i]
+                fn = (lambda k: _init_rec_block(k, cfg)) if kind == "recurrent" \
+                    else (lambda k: _init_attn_block(k, cfg, "dense"))
+                rem_blocks.append(fn(jax.random.fold_in(ks[3], i)))
+            params["rem"] = rem_blocks
+    elif cfg.arch_type == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_blocks"] = _stack_init(
+                lambda k: _init_attn_block(k, cfg, "dense"), ks[3], nd)
+        params["blocks"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, "moe"), ks[2], L - nd)
+    else:  # dense / vlm
+        params["blocks"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, "dense"), ks[2], L)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward_lm(params, cfg, tokens, *, extra_embeds=None, window=0,
+               use_pallas=False, return_cache=False, positions=None):
+    """tokens: (B, S) int32. extra_embeds: (B, T, d) prepended (VLM/audio
+    stubs). Returns (logits (B, S_total, V), aux, cache_or_None)."""
+    cd = dtype_of(cfg.compute_dtype)
+    x = embed(params["embed"], tokens, cd)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cd), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    ffn_kind_main = "moe" if cfg.arch_type == "moe" else "dense"
+    aux_total = 0.0
+    cache = {}
+
+    if cfg.arch_type == "ssm":
+        def body(carry, blk):
+            h, = carry
+            y = ssm_mod.mamba_full(blk["mamba"], norm(blk["ln"], h), cfg,
+                                   use_pallas=use_pallas,
+                                   chunk=cfg.ssm_chunk)
+            return (h + y,), None
+        (x,), _ = jax.lax.scan(body, (x,), params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        pat = cfg.rglru_block_pattern
+        def tile_body(carry, tile_params):
+            h, = carry
+            kvs = {}
+            for i, kind in enumerate(pat):
+                p = tile_params[f"{i}_{kind}"]
+                if kind == "recurrent":
+                    y = rglru_mod.rglru_full(p["rec"], norm(p["ln1"], h), cfg,
+                                             use_pallas=use_pallas)
+                    h = h + y
+                    h = h + mlp(p["ffn"], norm(p["ln2"], h), cfg.activation, cd)
+                else:
+                    h, _, kv = _attn_block_full(
+                        p, h, cfg, "dense", window=cfg.local_window,
+                        use_pallas=use_pallas, positions=positions,
+                        return_kv=return_cache)
+                    if return_cache:
+                        kvs = kv
+            return (h,), kvs if return_cache else None
+        tile_kvs = None
+        if "tiles" in params:
+            (x,), tile_kvs = jax.lax.scan(tile_body, (x,), params["tiles"])
+        for p in params.get("rem", []):
+            if "rec" in p:
+                y = rglru_mod.rglru_full(p["rec"], norm(p["ln1"], x), cfg,
+                                         use_pallas=use_pallas)
+                x = x + y
+                x = x + mlp(p["ffn"], norm(p["ln2"], x), cfg.activation, cd)
+            else:
+                x, _, _ = _attn_block_full(p, x, cfg, "dense",
+                                           window=cfg.local_window,
+                                           use_pallas=use_pallas,
+                                           positions=positions, return_kv=False)
+        if return_cache:
+            cache["att_kv"] = tile_kvs
+
+    else:  # dense / moe / vlm
+        def body(carry, blk):
+            h, aux = carry
+            h, a, kv = _attn_block_full(blk, h, cfg, ffn_kind_main,
+                                        window=window, use_pallas=use_pallas,
+                                        positions=positions,
+                                        return_kv=return_cache)
+            return (h, aux + a), kv if return_cache else None
+
+        if "dense_blocks" in params:
+            def dbody(carry, blk):
+                h, aux = carry
+                h, a, kv = _attn_block_full(blk, h, cfg, "dense", window=window,
+                                            use_pallas=use_pallas,
+                                            positions=positions,
+                                            return_kv=return_cache)
+                return (h, aux + a), kv if return_cache else None
+            (x, aux_total), kv_d = jax.lax.scan(dbody, (x, 0.0),
+                                                params["dense_blocks"])
+            if return_cache:
+                cache["dense_kv"] = kv_d
+        (x, aux_total), kv_m = jax.lax.scan(body, (x, aux_total),
+                                            params["blocks"])
+        if return_cache:
+            cache["kv"] = kv_m
+
+    x = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cd)
+    else:
+        logits = dense(params["lm_head"], x, cd)
+    return logits, aux_total, (cache if return_cache else None)
+
+
+def forward_hidden(params, cfg, tokens, **kw):
+    """Final-norm hidden states (B, S, d) — used by the PPO value head."""
+    return _forward_trunk(params, cfg, tokens, **kw)
+
+
+def _forward_trunk(params, cfg, tokens, *, extra_embeds=None, window=0,
+                   positions=None):
+    """The forward_lm body up to (and including) final_norm."""
+    cd = dtype_of(cfg.compute_dtype)
+    x = embed(params["embed"], tokens, cd)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cd), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    if cfg.arch_type == "ssm":
+        def body(carry, blk):
+            h, = carry
+            y = ssm_mod.mamba_full(blk["mamba"], norm(blk["ln"], h), cfg)
+            return (h + y,), None
+        (x,), _ = jax.lax.scan(body, (x,), params["blocks"])
+    elif cfg.arch_type == "hybrid":
+        pat = cfg.rglru_block_pattern
+        def tile_body(carry, tile_params):
+            h, = carry
+            for i, kind in enumerate(pat):
+                p = tile_params[f"{i}_{kind}"]
+                if kind == "recurrent":
+                    y = rglru_mod.rglru_full(p["rec"], norm(p["ln1"], h), cfg)
+                    h = h + y
+                    h = h + mlp(p["ffn"], norm(p["ln2"], h), cfg.activation, cd)
+                else:
+                    h, _, _ = _attn_block_full(
+                        p, h, cfg, "dense", window=cfg.local_window,
+                        use_pallas=False, positions=positions,
+                        return_kv=False)
+            return (h,), None
+        if "tiles" in params:
+            (x,), _ = jax.lax.scan(tile_body, (x,), params["tiles"])
+        for p in params.get("rem", []):
+            if "rec" in p:
+                y = rglru_mod.rglru_full(p["rec"], norm(p["ln1"], x), cfg)
+                x = x + y
+                x = x + mlp(p["ffn"], norm(p["ln2"], x), cfg.activation, cd)
+            else:
+                x, _, _ = _attn_block_full(p, x, cfg, "dense",
+                                           window=cfg.local_window,
+                                           use_pallas=False,
+                                           positions=positions,
+                                           return_kv=False)
+    else:
+        ffn_kind = "moe" if cfg.arch_type == "moe" else "dense"
+        def body(carry, blk):
+            h, = carry
+            h, _, _ = _attn_block_full(blk, h, cfg, ffn_kind, window=window,
+                                       use_pallas=False, positions=positions,
+                                       return_kv=False)
+            return (h,), None
+        if "dense_blocks" in params:
+            def dbody(carry, blk):
+                h, = carry
+                h, _, _ = _attn_block_full(blk, h, cfg, "dense", window=window,
+                                           use_pallas=False,
+                                           positions=positions,
+                                           return_kv=False)
+                return (h,), None
+            (x,), _ = jax.lax.scan(dbody, (x,), params["dense_blocks"])
+        (x,), _ = jax.lax.scan(body, (x,), params["blocks"])
+    return norm(params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token vs cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, length, dtype=jnp.bfloat16):
+    """Cache pytree for decode shapes; ``length`` = KV window actually kept."""
+    if cfg.arch_type == "ssm":
+        return ssm_mod.init_mamba_cache(cfg, batch, layers=cfg.num_layers)
+    if cfg.arch_type == "hybrid":
+        pat = cfg.rglru_block_pattern
+        n_tiles, rem = divmod(cfg.num_layers, len(pat))
+        n_att = sum(1 for k in pat if k == "attention") * n_tiles \
+            + sum(1 for k in pat[:rem] if k == "attention")
+        n_rec = cfg.num_layers - n_att
+        att_len = min(length, cfg.local_window)
+        return {
+            "rec": rglru_mod.init_rglru_cache(cfg, batch, n_rec),
+            "att": attn.init_kv_cache(cfg, batch, att_len, dtype, layers=n_att),
+        }
+    if cfg.attention == "mla":
+        return mla_mod.init_mla_cache(cfg, batch, length, dtype)
+    if cfg.arch_type == "moe" and cfg.first_dense_layers:
+        return attn.init_kv_cache(cfg, batch, length, dtype)
+    return attn.init_kv_cache(cfg, batch, length, dtype)
+
+
+def decode_lm(params, cfg, cache, token, pos, *, ring=False):
+    """token: (B,) int32; pos: (B,) absolute positions.
+    Returns (logits (B, V), new_cache)."""
+    cd = dtype_of(cfg.compute_dtype)
+    x = embed(params["embed"], token[:, None], cd)  # (B,1,d)
+
+    if cfg.arch_type == "ssm":
+        def body(h, blk_and_cache):
+            blk, lc = blk_and_cache
+            y, nc = ssm_mod.mamba_decode(blk["mamba"], norm(blk["ln"], h), lc, cfg)
+            return h + y, nc
+        x, new_cache = jax.lax.scan(
+            body, x, (params["blocks"],
+                      {"h": cache["h"], "conv": cache["conv"]}))
+
+    elif cfg.arch_type == "hybrid":
+        pat = cfg.rglru_block_pattern
+        n_tiles, rem = divmod(cfg.num_layers, len(pat))
+        rec_per_tile = sum(1 for k in pat if k == "recurrent")
+        att_per_tile = len(pat) - rec_per_tile
+        rec_c, att_c = cache["rec"], cache["att"]
+        n_rec_tiles = n_tiles * rec_per_tile
+        # split tile-region caches from remainder-region caches
+        rc_t = jax.tree.map(lambda a: a[:n_rec_tiles].reshape(
+            (n_tiles, rec_per_tile) + a.shape[1:]), rec_c)
+        ac_t = jax.tree.map(lambda a: a[:n_tiles * att_per_tile].reshape(
+            (n_tiles, att_per_tile) + a.shape[1:]), att_c)
+
+        def tile_body(carry, xs):
+            h, = carry
+            tp, rc, ac = xs
+            new_rc, new_ac = [], []
+            ri, ai = 0, 0
+            for i, kind in enumerate(pat):
+                p = tp[f"{i}_{kind}"]
+                if kind == "recurrent":
+                    lc = jax.tree.map(lambda a: a[ri], rc)
+                    y, nc = rglru_mod.rglru_decode(p["rec"], norm(p["ln1"], h),
+                                                   lc, cfg)
+                    h = h + y
+                    h = h + mlp(p["ffn"], norm(p["ln2"], h), cfg.activation, cd)
+                    new_rc.append(nc)
+                    ri += 1
+                else:
+                    lc = jax.tree.map(lambda a: a[ai], ac)
+                    h, nc = _attn_block_decode(p, h, lc, pos, cfg, "dense",
+                                               ring=True)
+                    new_ac.append(nc)
+                    ai += 1
+            stack = lambda cs: jax.tree.map(lambda *a: jnp.stack(a), *cs)
+            return (h,), (stack(new_rc), stack(new_ac))
+
+        if "tiles" in params:
+            (x,), (rc_new, ac_new) = jax.lax.scan(
+                tile_body, (x,), (params["tiles"], rc_t, ac_t))
+            rc_new = jax.tree.map(
+                lambda a: a.reshape((n_rec_tiles,) + a.shape[2:]), rc_new)
+            ac_new = jax.tree.map(
+                lambda a: a.reshape((n_tiles * att_per_tile,) + a.shape[2:]),
+                ac_new)
+        else:
+            rc_new = jax.tree.map(lambda a: a[:0], rec_c)
+            ac_new = att_c
+        ri = n_rec_tiles
+        rem_rc = []
+        for i in range(rem):
+            p = params["rem"][i]
+            lc = jax.tree.map(lambda a: a[ri + i], rec_c)
+            y, nc = rglru_mod.rglru_decode(p["rec"], norm(p["ln1"], x), lc, cfg)
+            x = x + y
+            x = x + mlp(p["ffn"], norm(p["ln2"], x), cfg.activation, cd)
+            rem_rc.append(nc)
+        if rem_rc:
+            rem_stacked = jax.tree.map(lambda *a: jnp.stack(a), *rem_rc)
+            rc_new = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                  rc_new, rem_stacked)
+        new_cache = {"rec": rc_new, "att": ac_new}
+
+    else:  # dense / moe / vlm / mla
+        ffn_kind = "moe" if cfg.arch_type == "moe" else "dense"
+        nd = cfg.first_dense_layers if cfg.arch_type == "moe" else 0
+        full_cache = cache
+
+        def split(c, lo, hi):
+            return jax.tree.map(lambda a: a[lo:hi], c)
+
+        def body_factory(kind):
+            def body(h, xs):
+                blk, lc = xs
+                h, nc = _attn_block_decode(blk, h, lc, pos, cfg, kind, ring=ring)
+                return h, nc
+            return body
+
+        L = cfg.num_layers
+        if nd:
+            x, c_dense = jax.lax.scan(body_factory("dense"), x,
+                                      (params["dense_blocks"],
+                                       split(full_cache, 0, nd)))
+            x, c_moe = jax.lax.scan(body_factory(ffn_kind), x,
+                                    (params["blocks"],
+                                     split(full_cache, nd, L)))
+            new_cache = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                     c_dense, c_moe)
+        else:
+            x, new_cache = jax.lax.scan(body_factory(ffn_kind), x,
+                                        (params["blocks"], full_cache))
+
+    x = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cd)
+    else:
+        logits = dense(params["lm_head"], x, cd)
+    return logits[:, 0], new_cache

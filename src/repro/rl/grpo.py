@@ -1,0 +1,84 @@
+"""GRPO actor-update step (the paper's evaluated RL algorithm, §6.1).
+
+The jitted ``grpo_train_step`` is also what the train_4k dry-run lowers:
+forward + clipped policy loss (+ optional KL-to-reference) + backward +
+AdamW — the paper-representative training step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.rl.loss import clipped_policy_loss, kl_penalty, token_logprobs
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0          # >0 adds KL-to-reference penalty
+    entropy_coef: float = 0.0
+    use_pallas_logprob: bool = False
+
+
+def grpo_loss_fn(params, cfg, batch, rl: GRPOConfig,
+                 ref_logprob=None):
+    """batch:
+      tokens (B, S)           — prompt + response (+pad)
+      response_mask (B, S)    — 1 on response tokens (as *targets*)
+      old_logprob (B, S)      — behavior-policy per-token logprobs
+      advantage (B,)          — group-relative advantage per sample
+      ref_logprob (B, S)      — optional frozen-reference logprobs (KL)
+      extra model inputs (vision_embeds / frames) pass through.
+    """
+    if ref_logprob is None:
+        ref_logprob = batch.get("ref_logprob")
+    tokens = batch["tokens"]
+    inputs = {k: v for k, v in batch.items()
+              if k in ("tokens", "vision_embeds", "frames")}
+    logits, aux = forward(params, cfg, inputs)
+    # VLM prepends vision tokens; predictions for text targets are the
+    # last S-1 text positions (same as pure LM after slicing the prefix)
+    S = tokens.shape[1]
+    logits = logits[:, -S:, :]
+    logp, ent = token_logprobs(logits[:, :-1], tokens[:, 1:],
+                               use_pallas=rl.use_pallas_logprob)
+    mask = batch["response_mask"][:, 1:]
+    old_lp = batch["old_logprob"][:, 1:]
+
+    pl_loss, stats = clipped_policy_loss(logp, old_lp, batch["advantage"],
+                                         mask, clip_eps=rl.clip_eps)
+    loss = pl_loss + aux
+    if rl.kl_coef and ref_logprob is not None:
+        loss = loss + rl.kl_coef * kl_penalty(logp, ref_logprob[:, 1:], mask)
+    if rl.entropy_coef:
+        loss = loss - rl.entropy_coef * (ent * mask).sum() / \
+            jnp.maximum(mask.sum(), 1.0)
+    metrics = {"loss": loss, "policy_loss": pl_loss,
+               "entropy": (ent * mask).sum() / jnp.maximum(mask.sum(), 1.0),
+               **stats}
+    return loss, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "opt_cfg"))
+def grpo_train_step(state: TrainState, cfg, rl: GRPOConfig,
+                    opt_cfg: OptimizerConfig, batch):
+    """One jitted GRPO update. Returns (new_state, metrics)."""
+    (_, metrics), grads = jax.value_and_grad(grpo_loss_fn, has_aux=True)(
+        state.params, cfg, batch, rl)
+    new_state, gnorm = state.apply_gradients(grads, opt_cfg)
+    metrics["grad_norm"] = gnorm
+    return new_state, metrics
+
+
+def grpo_grad_step(params, cfg, rl: GRPOConfig, batch):
+    """Gradients only (for streaming gradient accumulation)."""
+    (_, metrics), grads = jax.value_and_grad(grpo_loss_fn, has_aux=True)(
+        params, cfg, batch, rl)
+    return grads, metrics

@@ -1,0 +1,57 @@
+"""Policy-gradient losses (GRPO / PPO) with the fused logprob kernel.
+
+All losses are masked to response tokens; logits-side computation goes
+through ``token_logprobs`` which can use the Pallas ``grpo_logprob``
+kernel (the memory-bound hotspot over 100k-256k vocab logits).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_logprobs(logits, targets, use_pallas: bool = False):
+    """logits: (B, S, V) for predicting targets (B, S).
+    Returns (logprob (B,S) f32, entropy (B,S) f32)."""
+    if use_pallas:
+        from repro.kernels.grpo_logprob.ops import grpo_logprob
+        return grpo_logprob(logits, targets)
+    from repro.kernels.grpo_logprob.ref import grpo_logprob_ref
+    V = logits.shape[-1]
+    lp, ent = grpo_logprob_ref(logits.reshape(-1, V), targets.reshape(-1))
+    return lp.reshape(targets.shape), ent.reshape(targets.shape)
+
+
+def clipped_policy_loss(logp_new, logp_old, advantages, mask, *,
+                        clip_eps: float = 0.2):
+    """PPO/GRPO clipped surrogate.
+
+    logp_new/logp_old: (B, S) per-token; advantages: (B,) per sample
+    (GRPO) or (B, S) per token (PPO+GAE); mask: (B, S) response mask.
+    """
+    if advantages.ndim == 1:
+        advantages = advantages[:, None]
+    ratio = jnp.exp(logp_new - logp_old)
+    unclipped = ratio * advantages
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * advantages
+    per_tok = -jnp.minimum(unclipped, clipped)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    clip_frac = ((jnp.abs(ratio - 1) > clip_eps) * mask).sum() / denom
+    return loss, {"ratio_mean": (ratio * mask).sum() / denom,
+                  "clip_frac": clip_frac}
+
+
+def kl_penalty(logp_new, logp_ref, mask):
+    """k3 estimator (Schulman): exp(ref-new) - (ref-new) - 1 >= 0."""
+    d = logp_ref - logp_new
+    k3 = jnp.exp(d) - d - 1.0
+    return (k3 * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def value_loss(values, returns, old_values, mask, *, clip_eps: float = 0.2):
+    """Clipped value loss (PPO critic)."""
+    v_clip = old_values + jnp.clip(values - old_values, -clip_eps, clip_eps)
+    l1 = jnp.square(values - returns)
+    l2 = jnp.square(v_clip - returns)
+    return 0.5 * (jnp.maximum(l1, l2) * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,95 @@
+"""PPO actor + critic update ("under development" in the paper §6.1 —
+completed here). The critic is a value head over the same backbone
+trunk; reference/reward models plug in as additional RL tasks through
+TransferQueue exactly like the GRPO flow."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward, init_params
+from repro.models.layers import dense, init_dense, normal_init
+from repro.rl.loss import (clipped_policy_loss, kl_penalty, token_logprobs,
+                           value_loss)
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    clip_eps: float = 0.2
+    value_clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    kl_coef: float = 0.0
+    entropy_coef: float = 0.0
+    use_pallas_logprob: bool = False
+
+
+def init_critic_params(key, cfg):
+    """Critic = backbone + scalar value head."""
+    k1, k2 = jax.random.split(key)
+    return {"backbone": init_params(k1, cfg),
+            "value_head": init_dense(k2, cfg.d_model, 1)}
+
+
+def critic_forward(critic, cfg, tokens):
+    """Per-token values (B, S): value head over the backbone's final-norm
+    hidden states."""
+    from repro.models import transformer
+    hidden = transformer.forward_hidden(critic["backbone"], cfg, tokens)
+    v = dense(critic["value_head"], hidden, hidden.dtype)
+    return v[..., 0].astype(jnp.float32)
+
+
+def ppo_loss_fn(actor_params, critic_params, cfg, batch, rl: PPOConfig):
+    """batch: tokens, response_mask, old_logprob, advantage (B,S),
+    returns (B,S), old_values (B,S), optional ref_logprob."""
+    tokens = batch["tokens"]
+    logits, aux = forward(actor_params, cfg, {"tokens": tokens})
+    logp, ent = token_logprobs(logits[:, :-1], tokens[:, 1:],
+                               use_pallas=rl.use_pallas_logprob)
+    mask = batch["response_mask"][:, 1:]
+    pl_loss, stats = clipped_policy_loss(
+        logp, batch["old_logprob"][:, 1:], batch["advantage"][:, 1:], mask,
+        clip_eps=rl.clip_eps)
+
+    values = critic_forward(critic_params, cfg, tokens)[:, :-1]
+    vf = value_loss(values, batch["returns"][:, 1:],
+                    batch["old_values"][:, 1:], mask,
+                    clip_eps=rl.value_clip_eps)
+    loss = pl_loss + rl.vf_coef * vf + aux
+    if rl.kl_coef and "ref_logprob" in batch:
+        loss = loss + rl.kl_coef * kl_penalty(
+            logp, batch["ref_logprob"][:, 1:], mask)
+    if rl.entropy_coef:
+        loss = loss - rl.entropy_coef * (ent * mask).sum() / \
+            jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss, "policy_loss": pl_loss, "value_loss": vf,
+                  **stats}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl", "opt_cfg"))
+def ppo_train_step(actor_state: TrainState, critic_state: TrainState,
+                   cfg, rl: PPOConfig, opt_cfg: OptimizerConfig, batch):
+    def actor_loss(p):
+        return ppo_loss_fn(p, critic_state.params, cfg, batch, rl)
+
+    (_, metrics), a_grads = jax.value_and_grad(actor_loss, has_aux=True)(
+        actor_state.params)
+
+    def critic_loss(p):
+        tokens = batch["tokens"]
+        values = critic_forward(p, cfg, tokens)[:, :-1]
+        mask = batch["response_mask"][:, 1:]
+        return value_loss(values, batch["returns"][:, 1:],
+                          batch["old_values"][:, 1:], mask,
+                          clip_eps=rl.value_clip_eps)
+
+    c_grads = jax.grad(critic_loss)(critic_state.params)
+    new_actor, agn = actor_state.apply_gradients(a_grads, opt_cfg)
+    new_critic, cgn = critic_state.apply_gradients(c_grads, opt_cfg)
+    metrics.update(actor_grad_norm=agn, critic_grad_norm=cgn)
+    return new_actor, new_critic, metrics

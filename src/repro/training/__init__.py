@@ -1,0 +1,9 @@
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import (OptimizerConfig, adamw_update,
+                                      clip_by_global_norm, init_opt_state,
+                                      make_schedule)
+from repro.training.train_state import TrainState
+
+__all__ = ["OptimizerConfig", "adamw_update", "init_opt_state",
+           "make_schedule", "clip_by_global_norm", "TrainState",
+           "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,45 @@
+"""Checkpointing — save/restore arbitrary pytrees (params, optimizer
+state) to an .npz + JSON treedef pair. Works for sharded arrays by
+gathering to host (fine for the CPU container; on a real cluster this is
+the per-host shard writer plug point)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    keys, vals, _ = _flatten_with_paths(tree)
+    arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(vals)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {"step": step, "keys": keys}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like``. Returns (tree, step)."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keys_saved = meta["keys"]
+    keys_like, vals_like, treedef = _flatten_with_paths(like)
+    if keys_saved != keys_like:
+        raise ValueError("checkpoint structure mismatch: "
+                         f"{set(keys_saved) ^ set(keys_like)}")
+    vals = [jax.numpy.asarray(data[f"a{i}"]).astype(v.dtype)
+            for i, v in enumerate(vals_like)]
+    return jax.tree_util.tree_unflatten(treedef, vals), meta["step"]

@@ -1,0 +1,88 @@
+"""AdamW + LR schedules (cosine, and WSD for MiniCPM) — pure JAX, no optax.
+
+State is a pytree mirroring params: {"m": ..., "v": ..., "count": scalar}.
+Supports global-norm clipping and decoupled weight decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 1e-5
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    schedule: str = "constant"  # constant | cosine | wsd
+    warmup_steps: int = 10
+    total_steps: int = 1000
+    stable_frac: float = 0.8    # WSD: fraction of steps at peak LR
+    min_lr_frac: float = 0.1
+
+
+def make_schedule(cfg: OptimizerConfig) -> Callable:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+        if cfg.schedule == "constant":
+            frac = 1.0
+        elif cfg.schedule == "cosine":
+            t = jnp.clip((step - cfg.warmup_steps)
+                         / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+            frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "wsd":
+            # warmup -> stable plateau -> 1-sqrt decay (MiniCPM §WSD)
+            decay_start = cfg.stable_frac * cfg.total_steps
+            t = jnp.clip((step - decay_start)
+                         / max(1.0, cfg.total_steps - decay_start), 0, 1)
+            frac = jnp.where(step < decay_start, 1.0,
+                             cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                             * (1 - jnp.sqrt(t)))
+        else:
+            raise ValueError(cfg.schedule)
+        return cfg.lr * warm * frac
+    return sched
+
+
+def init_opt_state(params):
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, grad_norm)."""
+    sched = make_schedule(cfg)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    b1, b2 = cfg.betas
+    lr = sched(state["count"])
+
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                     state["v"], grads)
+    c = count.astype(jnp.float32)
+    mh_scale = 1.0 / (1 - b1 ** c)
+    vh_scale = 1.0 / (1 - b2 ** c)
+
+    def upd(p, m_, v_):
+        step = (m_ * mh_scale) / (jnp.sqrt(v_ * vh_scale) + cfg.eps)
+        return (p - lr * (step + cfg.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}, gnorm

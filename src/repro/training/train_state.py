@@ -1,0 +1,26 @@
+"""TrainState — params + optimizer state + step counter pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import (OptimizerConfig, adamw_update,
+                                      init_opt_state)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+    @classmethod
+    def create(cls, params):
+        return cls(params, init_opt_state(params), jnp.zeros((), jnp.int32))
+
+    def apply_gradients(self, grads, opt_cfg: OptimizerConfig):
+        new_params, new_opt, gnorm = adamw_update(
+            self.params, grads, self.opt_state, opt_cfg)
+        return self._replace(params=new_params, opt_state=new_opt,
+                             step=self.step + 1), gnorm

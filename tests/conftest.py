@@ -1,0 +1,27 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import ByteTokenizer
+
+
+def tiny_cfg(arch="qwen2_5_7b", **overrides):
+    """2-layer, d64 variant with byte-tokenizer vocab (CPU-fast)."""
+    base = dict(num_layers=2, d_model=64, d_ff=128, num_heads=2,
+                num_kv_heads=2, head_dim=32,
+                vocab_size=ByteTokenizer.vocab_size)
+    base.update(overrides)
+    return dataclasses.replace(get_config(arch).reduced(), **base)
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_params(tiny_dense_cfg):
+    from repro.models import init_params
+    return init_params(jax.random.PRNGKey(0), tiny_dense_cfg)

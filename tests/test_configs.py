@@ -1,0 +1,58 @@
+"""Registry + parameter-count fidelity for the assigned architectures."""
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+
+# expected total parameter counts (from the source papers / model cards)
+EXPECTED_PARAMS = {
+    "recurrentgemma_9b": 9e9,
+    "stablelm_12b": 12e9,
+    "minicpm3_4b": 4e9,
+    "grok_1_314b": 314e9,
+    "whisper_tiny": 39e6,
+    "minicpm_2b": 2.7e9,
+    "qwen1_5_32b": 32e9,
+    "falcon_mamba_7b": 7e9,
+    "deepseek_v2_236b": 236e9,
+    "internvl2_26b": 20e9,   # LM backbone only (InternLM2-20B); ViT stubbed
+    "qwen2_5_7b": 7.6e9,
+    "qwen2_5_32b": 32e9,
+}
+
+
+def test_registry_complete():
+    cfgs = all_configs()
+    assert len(cfgs) == 12
+    for arch in ARCH_IDS:
+        assert cfgs[arch].name
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_within_tolerance(arch):
+    cfg = get_config(arch)
+    got = cfg.param_count()
+    want = EXPECTED_PARAMS[arch]
+    assert 0.6 * want <= got <= 1.45 * want, \
+        f"{arch}: {got/1e9:.2f}B vs expected {want/1e9:.2f}B"
+
+
+def test_moe_active_params():
+    g = get_config("grok_1_314b")
+    assert g.active_param_count() < g.param_count() * 0.45
+    d = get_config("deepseek_v2_236b")
+    # DeepSeek-V2: ~21B active of 236B
+    assert d.active_param_count() < d.param_count() * 0.2
+
+
+def test_reduced_configs_small():
+    for arch in ARCH_IDS:
+        r = get_config(arch).reduced()
+        assert r.num_layers == 2
+        assert r.d_model <= 512
+        assert r.num_experts in (0, 4)
+
+
+def test_aliases():
+    assert get_config("qwen1.5-32b").name == "qwen1.5-32b"
+    with pytest.raises(KeyError):
+        get_config("nonexistent-13b")

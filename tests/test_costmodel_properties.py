@@ -1,0 +1,78 @@
+"""Hypothesis property tests on the cost model / simulator invariants —
+these are the planner's decision inputs, so monotonicity bugs would
+silently corrupt resource plans."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.planner import (ClusterPlan, Workload, forward_flops,
+                                kv_cache_bytes, roofline_terms, simulate,
+                                step_collective_bytes)
+
+CFG = get_config("qwen2_5_7b")
+MOE = get_config("deepseek_v2_236b")
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 64), s=st.sampled_from([128, 1024, 4096]))
+def test_flops_monotone_in_batch_and_seq(b, s):
+    assert forward_flops(CFG, b + 1, s) > forward_flops(CFG, b, s)
+    assert forward_flops(CFG, b, 2 * s) > 2 * forward_flops(CFG, b, s) * 0.99
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 128), ln=st.sampled_from([1024, 32768, 524288]))
+def test_cache_bytes_scale(b, ln):
+    assert kv_cache_bytes(CFG, b, ln) == pytest.approx(
+        b * kv_cache_bytes(CFG, 1, ln), rel=1e-6)
+    # MLA cache strictly smaller than GQA-equivalent at same shape
+    mla = get_config("minicpm3_4b")
+    gqa_equiv = b * mla.num_layers * ln * 2 * mla.num_kv_heads * 64 * 2
+    assert kv_cache_bytes(mla, b, ln) < gqa_equiv
+
+
+@settings(max_examples=20, deadline=None)
+@given(tp=st.sampled_from([2, 4, 8, 16]))
+def test_tp_allreduce_grows_with_tp_fraction(tp):
+    """For fixed total chips, higher tp -> more TP collective per chip."""
+    n = 256
+    co_lo = step_collective_bytes(CFG, "train_4k",
+                                  {"data": n // tp, "model": tp})
+    co_hi = step_collective_bytes(CFG, "train_4k",
+                                  {"data": n // (2 * tp) or 1,
+                                   "model": 2 * tp})
+    if 2 * tp <= 32:
+        assert co_hi["tp_allreduce"] > co_lo["tp_allreduce"]
+
+
+def test_device_limit_reduces_a2a_only():
+    import dataclasses
+    base = step_collective_bytes(MOE, "train_4k", {"data": 16, "model": 16})
+    lim = step_collective_bytes(
+        dataclasses.replace(MOE, moe_device_limit=2), "train_4k",
+        {"data": 16, "model": 16})
+    assert lim["moe_all2all"] < base["moe_all2all"]
+    assert lim["tp_allreduce"] == base["tp_allreduce"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_simulator_async_never_slower_than_separated(seed):
+    w = Workload(prompts_per_step=64, group_size=4, num_steps=3)
+    plan = ClusterPlan(128, 64, 64, 4, 8)
+    sep = simulate(CFG, plan, w, "separated", seed=seed)
+    asy = simulate(CFG, plan, w, "separated_async", seed=seed)
+    assert asy["throughput_samples_per_s"] >= \
+        sep["throughput_samples_per_s"] * 0.999
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_simulator_conserves_samples(seed):
+    w = Workload(prompts_per_step=32, group_size=4, num_steps=4)
+    plan = ClusterPlan(64, 32, 32, 4, 8)
+    for mode in ("separated", "separated_tq", "separated_async"):
+        r = simulate(CFG, plan, w, mode, seed=seed)
+        implied = r["throughput_samples_per_s"] * r["wall_s"]
+        assert implied == pytest.approx(
+            w.num_steps * w.prompts_per_step * w.group_size, rel=1e-6)

@@ -1,0 +1,16 @@
+"""Explicit all_to_all expert-parallel MoE: subprocess check on an
+8-device (2 data x 4 model) mesh — must match the single-device MoE
+oracle exactly on drop-free shapes, with explicit all-to-all ops in HLO."""
+import os
+import subprocess
+import sys
+
+
+def test_ep_moe_all_to_all_subprocess():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "ep_moe_check.py")],
+        capture_output=True, text=True, timeout=600, cwd=root)
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-1500:])
+    assert "EP MoE all_to_all OK" in r.stdout
+    assert "all-to-all ops in HLO" in r.stdout

@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+key = jax.random.PRNGKey(0)
+
+
+def k(i):
+    return jax.random.fold_in(key, i)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 128, 4, 4, 64),       # MHA
+    (2, 256, 4, 2, 64),       # GQA 2:1
+    (1, 256, 8, 1, 32),       # MQA
+    (2, 128, 4, 4, 128),      # MXU-aligned head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention(B, S, H, KV, hd, dtype, window):
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+    q = jax.random.normal(k(1), (B, S, H, hd), dtype)
+    kk = jax.random.normal(k(2), (B, S, KV, hd), dtype)
+    v = jax.random.normal(k(3), (B, S, KV, hd), dtype)
+    out = flash_attention(q, kk, v, window=window)
+    ref = flash_attention_ref(q, kk, v, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_odd_shape_falls_back():
+    from repro.kernels.flash_attention import flash_attention, \
+        flash_attention_ref
+    q = jax.random.normal(k(1), (1, 100, 2, 16))
+    kv = jax.random.normal(k(2), (1, 100, 2, 16))
+    np.testing.assert_allclose(flash_attention(q, kv, kv),
+                               flash_attention_ref(q, kv, kv),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (2, 1024, 4, 2, 64),
+    (1, 2048, 8, 8, 32),
+    (3, 512, 4, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, H, KV, hd, dtype):
+    from repro.kernels.decode_attention import (decode_attention,
+                                                decode_attention_ref)
+    q = jax.random.normal(k(1), (B, 1, H, hd), dtype)
+    kc = jax.random.normal(k(2), (B, S, KV, hd), dtype)
+    vc = jax.random.normal(k(3), (B, S, KV, hd), dtype)
+    fill = jax.random.randint(k(4), (B,), 1, S + 1)
+    valid = jnp.arange(S)[None, :] < fill[:, None]
+    out = decode_attention(q, kc, vc, valid)
+    ref = decode_attention_ref(q, kc, vc, valid)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W", [(1, 256, 128), (2, 512, 256), (3, 128, 384)])
+def test_rglru_scan(B, S, W):
+    from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
+    a = jax.random.uniform(k(1), (B, S, W), minval=0.4, maxval=0.999)
+    b = jax.random.normal(k(2), (B, S, W))
+    np.testing.assert_allclose(rglru_scan(a, b), rglru_scan_ref(a, b),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_rglru_scan_block_boundary_carry():
+    """State must carry exactly across sequence-block boundaries."""
+    from repro.kernels.rglru_scan import rglru_scan, rglru_scan_ref
+    a = jnp.full((1, 512, 128), 0.9)
+    b = jnp.ones((1, 512, 128))
+    out = rglru_scan(a, b, block_s=128)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,D,N", [(1, 128, 128, 16), (2, 256, 256, 8)])
+def test_mamba_scan(B, S, D, N):
+    from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref
+    x = jax.random.normal(k(1), (B, S, D))
+    dt = 0.1 * jax.nn.softplus(jax.random.normal(k(2), (B, S, D)))
+    a = -jnp.abs(jax.random.normal(k(3), (D, N)))
+    b = jax.random.normal(k(4), (B, S, N))
+    c = jax.random.normal(k(5), (B, S, N))
+    np.testing.assert_allclose(mamba_scan(x, dt, a, b, c),
+                               mamba_scan_ref(x, dt, a, b, c),
+                               atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# grpo_logprob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,V", [(256, 2048), (512, 4096), (512, 8192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grpo_logprob(N, V, dtype):
+    from repro.kernels.grpo_logprob import grpo_logprob, grpo_logprob_ref
+    logits = (5 * jax.random.normal(k(1), (N, V))).astype(dtype)
+    tgt = jax.random.randint(k(2), (N,), 0, V)
+    lp, ent = grpo_logprob(logits, tgt)
+    lpr, entr = grpo_logprob_ref(logits.astype(jnp.float32), tgt)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(lp, lpr, atol=tol, rtol=tol)
+    np.testing.assert_allclose(ent, entr, atol=5 * tol, rtol=5 * tol)
+
+
+def test_grpo_logprob_batched_shape():
+    from repro.kernels.grpo_logprob.ops import grpo_logprob
+    logits = jax.random.normal(k(1), (2, 8, 512))
+    tgt = jax.random.randint(k(2), (2, 8), 0, 512)
+    lp, ent = grpo_logprob(logits, tgt)
+    assert lp.shape == (2, 8) and ent.shape == (2, 8)
+    assert bool((ent >= -1e-3).all())  # entropy non-negative

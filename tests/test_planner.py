@@ -1,0 +1,120 @@
+"""Planner: cost model sanity + simulator semantics + plan search."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.planner import (HW, ClusterPlan, Workload, candidate_plans,
+                                forward_flops, plan_resources,
+                                roofline_terms, simulate, step_flops)
+
+
+def test_forward_flops_scales_linearly_in_batch():
+    cfg = get_config("qwen2_5_7b")
+    f1 = forward_flops(cfg, 1, 2048)
+    f2 = forward_flops(cfg, 2, 2048)
+    assert f2 == pytest.approx(2 * f1, rel=1e-6)
+
+
+def test_forward_flops_close_to_2nd():
+    """For a dense model at moderate S, flops ≈ 2·N·D within 2x."""
+    cfg = get_config("qwen2_5_7b")
+    S, B = 2048, 1
+    est = forward_flops(cfg, B, S)
+    twnd = 2.0 * cfg.param_count() * B * S
+    assert 0.8 * twnd < est < 2.0 * twnd
+
+
+def test_moe_flops_use_active_params():
+    moe = get_config("deepseek_v2_236b")
+    est = forward_flops(moe, 1, 2048)
+    act = 2.0 * moe.active_param_count() * 2048
+    tot = 2.0 * moe.param_count() * 2048
+    assert est < 0.5 * tot
+    assert est > 0.5 * act
+
+
+def test_step_flops_train_is_3x_forward():
+    cfg = get_config("minicpm_2b")
+    assert step_flops(cfg, "train_4k") == pytest.approx(
+        3 * forward_flops(cfg, 256, 4096), rel=1e-9)
+
+
+def test_roofline_terms_structure():
+    cfg = get_config("qwen1_5_32b")
+    rt = roofline_terms(cfg, "train_4k", {"data": 16, "model": 16})
+    assert rt["n_chips"] == 256
+    assert rt["bottleneck"] in ("compute", "memory", "collective")
+    assert rt["t_step_lower_bound"] == max(rt["t_compute"], rt["t_memory"],
+                                           rt["t_collective"])
+    for k in ("t_compute", "t_memory", "t_collective"):
+        assert rt[k] > 0
+
+
+def test_decode_memory_bound():
+    """Single-token decode must be memory-bound (weights read per token)."""
+    cfg = get_config("qwen1_5_32b")
+    rt = roofline_terms(cfg, "decode_32k", {"data": 16, "model": 16})
+    assert rt["t_memory"] > rt["t_compute"]
+
+
+def test_simulator_mode_ordering():
+    cfg = get_config("qwen2_5_7b")
+    w = Workload(prompts_per_step=128, group_size=8, num_steps=4)
+    plan = ClusterPlan(256, 128, 128, 4, 8)
+    r = {m: simulate(cfg, plan, w, m)["throughput_samples_per_s"]
+         for m in ("separated", "separated_tq", "separated_async")}
+    assert r["separated"] < r["separated_tq"] < r["separated_async"]
+
+
+def test_simulator_scaling_improves_asyncflow_ratio():
+    """The paper's headline: AsyncFlow's advantage over the colocated
+    baseline grows with cluster size (Fig. 10)."""
+    cfg = get_config("qwen2_5_7b")
+    w = Workload(prompts_per_step=256, group_size=8, num_steps=4)
+    ratios = []
+    for n in (64, 256, 1024):
+        plan = plan_resources(cfg, n, w).plan
+        af = simulate(cfg, plan, w, "separated_async")
+        verl = simulate(cfg, ClusterPlan(n, n, n, 4, 8,
+                                         reshard_s=1.0 + 0.002 * n),
+                        w, "colocated")
+        ratios.append(af["throughput_samples_per_s"]
+                      / verl["throughput_samples_per_s"])
+    assert ratios[0] < ratios[-1]
+    assert ratios[-1] > 1.2
+
+
+def test_plan_resources_valid_split():
+    cfg = get_config("qwen2_5_7b")
+    w = Workload(prompts_per_step=64, group_size=4, num_steps=2)
+    pr = plan_resources(cfg, 128, w)
+    p = pr.plan
+    assert p.rollout_chips + p.train_chips == 128
+    assert p.rollout_chips % p.rollout_tp == 0
+    assert pr.throughput > 0
+    assert pr.candidates_scored == len(candidate_plans(128))
+
+
+def test_hybrid_cost_model_profiling_path():
+    cfg = get_config("qwen2_5_7b")
+    w = Workload(prompts_per_step=64, group_size=4, num_steps=2)
+    calls = []
+
+    def profile_fn(plan):
+        calls.append(plan)
+        return {"decode_token_s": 0.001}
+
+    pr = plan_resources(cfg, 128, w, profile_fn=profile_fn, profile_top_k=2)
+    assert len(calls) == 2
+    assert pr.throughput > 0
+
+
+def test_profiling_hybrid_path_end_to_end():
+    """§4.3 hybrid: measure reduced blocks on CPU, extrapolate, re-rank."""
+    from repro.core.planner.profiling import make_profile_fn
+    cfg = get_config("qwen2_5_7b")
+    w = Workload(prompts_per_step=64, group_size=4, num_steps=2)
+    pf = make_profile_fn(cfg, w)
+    assert pf.raw["reduced_decode_s"] > 0
+    assert pf.raw["reduced_train_s"] > 0
+    pr = plan_resources(cfg, 128, w, profile_fn=pf, profile_top_k=2)
+    assert pr.throughput > 0

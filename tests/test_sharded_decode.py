@@ -1,0 +1,16 @@
+"""Distributed flash-decode (HC3 production path): subprocess check on 8
+fake devices — partial-softmax shard combine matches the single-device
+oracle, with O(B·H·hd) combine collectives."""
+import os
+import subprocess
+import sys
+
+
+def test_sharded_flash_decode_subprocess():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts",
+                                      "sharded_decode_check.py")],
+        capture_output=True, text=True, timeout=600, cwd=root)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-1000:])
+    assert "sharded flash-decode OK" in r.stdout
