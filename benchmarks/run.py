@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV. Mapping:
   gantt               — Fig. 11 (bubble fractions per instance)
   stability           — Fig. 12 (async vs sync reward)
   transfer_queue      — §3.5 (concurrency micro-benchmarks)
+  stage_graph         — §4.1 (fused vs. staged pipeline bubbles)
   kernels             — kernel oracle timings + kernel-vs-oracle error
   roofline            — deliverable (g): dry-run roofline summary
 """
@@ -17,7 +18,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablation, gantt, kernel_bench, roofline, scaling,
-                            stability, transfer_queue_bench)
+                            stability, stage_graph_bench,
+                            transfer_queue_bench)
 
     suites = [
         ("ablation", ablation.run),
@@ -25,6 +27,7 @@ def main() -> None:
         ("gantt", gantt.run),
         ("stability", stability.run),
         ("transfer_queue", transfer_queue_bench.run),
+        ("stage_graph", stage_graph_bench.run),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),
     ]

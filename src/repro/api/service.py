@@ -5,12 +5,22 @@ The key APIs the paper lists for industrial workflow automation:
   get_experience_data, weight_sync_notify
 exposed over the in-process service object (an RPC layer would wrap this
 1:1 on a real cluster — the surface is the contribution, not the wire).
+
+Workflow automation on top of the stage-graph subsystem: services can
+``register_dataflow`` custom algorithm graphs, ``register_stage`` extra
+streaming tasks onto an existing graph (e.g. a filtering or auxiliary
+scoring stage), and ``run_dataflow`` to compile a graph onto one shared
+TransferQueue and drive it under any workflow mode.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core.transfer_queue import TransferQueue
+from repro.core.workflow.stage_graph import (StageGraph, StageRunner,
+                                             StageSpec, WorkflowConfig,
+                                             build_dataflow,
+                                             register_dataflow)
 from repro.core.workflow.weight_sync import (WeightChannel, WeightReceiver,
                                              WeightSender)
 from repro.engines.adapter import EngineRegistry
@@ -79,3 +89,32 @@ class AsyncFlowService:
         r = WeightReceiver(self.channel, init_params, version=0)
         self.receivers.append(r)
         return r
+
+    # -- stage-graph workflow automation (§5.1) ------------------------------
+
+    def register_dataflow(self, name: str,
+                          builder: Callable[..., StageGraph]) -> None:
+        """Register a custom algorithm dataflow (``builder(**kw) ->
+        StageGraph``) selectable via ``TrainerConfig(algorithm=name)``."""
+        register_dataflow(name, builder)
+
+    def build_dataflow(self, name: str, **kw) -> StageGraph:
+        return build_dataflow(name, **kw)
+
+    def register_stage(self, graph: StageGraph, spec: StageSpec
+                       ) -> StageGraph:
+        """Attach a custom streaming task to an existing dataflow; the
+        graph re-validates (topology checks) at run time."""
+        return graph.add(spec)
+
+    def run_dataflow(self, graph: Union[str, StageGraph],
+                     cfg: WorkflowConfig, prompt_stream,
+                     engines: Optional[Dict[str, Any]] = None, **kw):
+        """Compile a dataflow onto one shared TransferQueue and run it.
+        ``engines`` defaults to the engines created via init_engines."""
+        if isinstance(graph, str):
+            graph = build_dataflow(graph, **kw)
+        runner = StageRunner(cfg, graph,
+                             engines=engines or self.engines,
+                             prompt_stream=prompt_stream)
+        return runner.run()

@@ -4,6 +4,13 @@
 algorithm choice (GRPO/PPO), builds engines through the backend adapters,
 and runs the post-training workflow in any of the three modes. Minimal
 config in, WorkflowResult out.
+
+``TrainerConfig(algorithm=...)`` selects a registered streaming dataflow
+(``rl/grpo.py`` / ``rl/ppo.py`` declare the built-ins; custom graphs
+register through :func:`repro.core.workflow.register_dataflow` or the
+service API) and compiles it onto one shared TransferQueue via
+:class:`StageRunner` — every RL task (generate, ref_inference, reward,
+advantage, actor/critic update) streams as its own pipeline stage.
 """
 from __future__ import annotations
 
@@ -13,12 +20,13 @@ from typing import Optional
 import jax
 
 from repro.configs import get_config
-from repro.core.workflow import AsyncRLRunner, WorkflowConfig
+from repro.core.workflow import StageRunner, WorkflowConfig, build_dataflow
 from repro.data import PromptDataset
 from repro.data.tokenizer import ByteTokenizer
-from repro.engines import JaxRolloutEngine, JaxTrainEngine
+from repro.engines import JaxCriticEngine, JaxRolloutEngine, JaxTrainEngine
 from repro.models import init_params
 from repro.rl.grpo import GRPOConfig
+from repro.rl.ppo import PPOConfig, init_critic_params
 from repro.training.optimizer import OptimizerConfig
 
 
@@ -26,7 +34,7 @@ from repro.training.optimizer import OptimizerConfig
 class TrainerConfig:
     arch: str = "qwen2_5_7b"
     reduced: bool = True               # CPU-scale variant
-    algorithm: str = "grpo"            # grpo | ppo
+    algorithm: str = "grpo"            # any registered dataflow (grpo | ppo)
     mode: str = "async"                # baseline | streaming | async
     num_steps: int = 8
     prompts_per_step: int = 4
@@ -41,9 +49,12 @@ class TrainerConfig:
     seed: int = 0
     seq_len: int = 32
     policy: str = "fifo"
+    num_storage_units: int = 2
     reward: str = "exact"              # exact | shaped
-    kl_coef: float = 0.0               # >0: GRPO+KL with a frozen reference
+    kl_coef: float = 0.0               # >0: adds the ref_inference stage
     chunk_tokens: int = 0              # >0: partial rollout (k1.5-style)
+    gamma: float = 1.0                 # PPO/GAE discount
+    gae_lambda: float = 0.95           # PPO/GAE lambda
     checkpoint_dir: str = ""           # save final state when set
     channel_bandwidth_gbps: float = 0.0  # simulated host-net weight path
 
@@ -71,14 +82,30 @@ class Trainer:
             reward_fn=(math_reward_shaped if tcfg.reward == "shaped"
                        else math_reward),
             ref_params=ref_params, chunk_tokens=tcfg.chunk_tokens)
-        self.train_engine = JaxTrainEngine(
-            cfg, params, rl=GRPOConfig(kl_coef=tcfg.kl_coef),
-            opt=OptimizerConfig(lr=tcfg.lr, warmup_steps=2,
-                                total_steps=tcfg.num_steps,
-                                schedule=cfg.lr_schedule
-                                if cfg.lr_schedule != "cosine" else "constant"),
-            global_batch=tcfg.prompts_per_step * tcfg.group_size,
-            seq_len=tcfg.seq_len)
+        opt = OptimizerConfig(lr=tcfg.lr, warmup_steps=2,
+                              total_steps=tcfg.num_steps,
+                              schedule=cfg.lr_schedule
+                              if cfg.lr_schedule != "cosine" else "constant")
+        global_batch = tcfg.prompts_per_step * tcfg.group_size
+        if tcfg.algorithm == "ppo":
+            rl_cfg = PPOConfig(kl_coef=tcfg.kl_coef)
+            self.train_engine = JaxTrainEngine(
+                cfg, params, rl=rl_cfg, opt=opt, algorithm="ppo",
+                global_batch=global_batch, seq_len=tcfg.seq_len)
+            self.critic_engine = JaxCriticEngine(
+                cfg, init_critic_params(jax.random.PRNGKey(tcfg.seed + 1),
+                                        cfg),
+                rl=rl_cfg, opt=opt, global_batch=global_batch,
+                seq_len=tcfg.seq_len)
+        else:
+            self.train_engine = JaxTrainEngine(
+                cfg, params, rl=GRPOConfig(kl_coef=tcfg.kl_coef), opt=opt,
+                global_batch=global_batch, seq_len=tcfg.seq_len)
+            self.critic_engine = None
+        self.engines = {"rollout": self.rollout_engine,
+                        "actor": self.train_engine}
+        if self.critic_engine is not None:
+            self.engines["critic"] = self.critic_engine
         self.dataset = PromptDataset(seed=tcfg.seed)
 
     def fit(self):
@@ -90,11 +117,12 @@ class Trainer:
             prompts_per_step=t.prompts_per_step, group_size=t.group_size,
             num_steps=t.num_steps, staleness=t.staleness,
             staggered=t.staggered, policy=t.policy,
-            channel_bandwidth_gbps=t.channel_bandwidth_gbps,
-            extra_columns=("ref_logprob",) if t.kl_coef > 0 else ())
-        runner = AsyncRLRunner(
-            wcfg, rollout_engine=self.rollout_engine,
-            train_engine=self.train_engine,
+            num_storage_units=t.num_storage_units,
+            channel_bandwidth_gbps=t.channel_bandwidth_gbps)
+        graph = build_dataflow(t.algorithm, kl_coef=t.kl_coef,
+                               gamma=t.gamma, lam=t.gae_lambda)
+        runner = StageRunner(
+            wcfg, graph, engines=self.engines,
             prompt_stream=lambda s: self.dataset.prompts_for_step(
                 s, t.prompts_per_step))
         result = runner.run()

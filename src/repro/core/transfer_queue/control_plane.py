@@ -128,6 +128,9 @@ class TransferQueueController:
                     return None
                 self._cv.wait(timeout=remaining if remaining is not None
                               else 0.1)
+            # §3.5 instrumentation: only the blocked interval counts as
+            # wait — scheduling/packing below is controller work time
+            self.total_wait_s += time.monotonic() - t0
             if self.policy == "fifo":
                 chosen = list(itertools.islice(self._avail, batch_size))
             else:
@@ -136,7 +139,6 @@ class TransferQueueController:
             for i in chosen:
                 self._consumed[i] = True
                 self._avail.pop(i, None)
-            self.total_wait_s += time.monotonic() - t0
             return BatchMeta(chosen, list(self.columns), consumer)
 
     def _schedule(self, avail: List[int], n: int, consumer: str) -> List[int]:

@@ -68,7 +68,18 @@ class StorageUnit:
     def get(self, idxs: Iterable[int], columns: Sequence[str]) -> Dict[str, list]:
         with self._lock:
             self.n_reads += 1
-            return {c: [self._data[c][i] for i in idxs] for c in columns}
+            out: Dict[str, list] = {}
+            for c in columns:
+                col = self._data.get(c)
+                vals = []
+                for i in idxs:
+                    if col is None or i not in col:
+                        raise KeyError(
+                            f"storage unit {self.unit_id}: row {i} has no "
+                            f"value for column {c!r}")
+                    vals.append(col[i])
+                out[c] = vals
+            return out
 
     def clear(self) -> None:
         with self._lock:

@@ -1,10 +1,15 @@
-from repro.core.workflow.async_engine import (AsyncRLRunner, WorkflowConfig,
-                                              WorkflowResult)
+from repro.core.workflow.async_engine import AsyncRLRunner
 from repro.core.workflow.events import Event, EventLog
+from repro.core.workflow.stage_graph import (StageGraph, StageRunner,
+                                             StageSpec, WorkflowConfig,
+                                             WorkflowResult, build_dataflow,
+                                             register_dataflow)
 from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
                                              VersionedWeights, WeightChannel,
                                              WeightReceiver, WeightSender)
 
 __all__ = ["AsyncRLRunner", "WorkflowConfig", "WorkflowResult", "EventLog",
            "Event", "WeightChannel", "WeightSender", "WeightReceiver",
-           "StaggeredUpdateGroup", "VersionedWeights"]
+           "StaggeredUpdateGroup", "VersionedWeights", "StageGraph",
+           "StageSpec", "StageRunner", "register_dataflow",
+           "build_dataflow"]

@@ -1,22 +1,16 @@
-"""Producer-consumer asynchronous RL workflow (paper §4).
+"""Producer-consumer asynchronous RL workflow (paper §4) — legacy facade.
 
-Wires TransferQueue, the rollout/train engines (via the backend adapters,
-§5.2) and the weight-sync module into one of three workflow modes — the
-exact configurations of the paper's Table 1 ablation:
-
-  baseline   — conventional task-separated framework: one task effectively
-               runs at a time. The trainer waits for the ENTIRE global
-               batch before computing; prompts for step s+1 are released
-               only after the step-s update and a blocking weight sync.
-  streaming  — + TransferQueue: the trainer starts on micro-batches as
-               soon as they stream in (pipeline overlap, §4.1). Still
-               on-policy: rollout for step s+1 waits for weights s+1 at
-               the iteration boundary (warm-up/cool-down bubbles remain).
-  async      — + delayed parameter update (§4.2.2): prompts stream one
-               step ahead, rollout keeps generating on weights at most
-               ``staleness`` versions old while new weights stage to host
-               buffers, swapping at generation boundaries. The
-               producer-consumer asynchrony removes the boundary bubbles.
+``AsyncRLRunner`` keeps the original two-task surface (a fused rollout
+engine exposing ``generate``/``generate_chunked`` plus a train engine
+exposing ``update``) but no longer hard-codes its own worker loops: it
+compiles the fused shape into a two-stage :class:`StageGraph` and runs it
+through the generic :class:`StageRunner` over a single shared
+TransferQueue. Multi-stage dataflows (generate → ref_inference →
+reward/advantage → actor/critic update) are declared in ``rl/grpo.py``
+and ``rl/ppo.py`` and run through the same runner — see
+``stage_graph.py`` for the mode semantics (baseline / streaming / async),
+the staleness gate and delayed parameter update, all of which are owned
+by the runner and therefore shared by every dataflow.
 
 Every sample row carries the weight version that produced it; observed
 staleness at consumption is recorded and property-tested:
@@ -25,259 +19,76 @@ gate + one-step-ahead prompt release), with mean ≤ ``staleness``.
 """
 from __future__ import annotations
 
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
-import numpy as np
-
-from repro.core.transfer_queue import TransferQueue
 from repro.core.workflow.events import EventLog
-from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
-                                             WeightChannel, WeightReceiver,
-                                             WeightSender)
+from repro.core.workflow.stage_graph import (StageGraph, StageRunner,
+                                             StageSpec, WorkflowConfig,
+                                             WorkflowResult)
 
 ROLLOUT_TASK = "actor_rollout"
 TRAIN_TASK = "actor_update"
 
 
-@dataclass
-class WorkflowConfig:
-    mode: str = "async"               # baseline | streaming | async
-    num_rollout_workers: int = 2
-    rollout_batch: int = 2            # prompts per generate() call
-    train_micro_batch: int = 4        # samples per trainer fetch
-    prompts_per_step: int = 4         # prompts consumed per training step
-    group_size: int = 4               # G responses per prompt (GRPO)
-    num_steps: int = 8
-    staleness: int = 1
-    staggered: bool = False           # sub-step async (Fig. 8d)
-    num_storage_units: int = 2
-    policy: str = "fifo"
-    channel_bandwidth_gbps: float = 0.0
-    extra_columns: tuple = ()      # e.g. ("ref_logprob",) for GRPO+KL
-
-    @property
-    def samples_per_step(self) -> int:
-        return self.prompts_per_step * self.group_size
-
-
-@dataclass
-class WorkflowResult:
-    wall_time_s: float
-    samples_trained: int
-    throughput: float                 # samples / s
-    metrics: List[dict]
-    staleness_seen: List[int]
-    log: EventLog
-    bubble_fraction: Dict[str, float] = field(default_factory=dict)
-
-
 class AsyncRLRunner:
-    """Drives rollout workers (producer threads) and the trainer (consumer)
-    through TransferQueue under the configured workflow mode."""
+    """Drives a fused rollout producer and a trainer consumer through the
+    stage-graph runner under the configured workflow mode.
+
+    rollout_engine — .generate(params, prompts, rng) ->
+        list of row dicts: {prompt, response, logprob, reward,
+        advantage, token_len}; one row per (prompt x G) sample. Engines
+        with ``chunk_tokens > 0`` use .generate_chunked for partial
+        rollout (k1.5-style, §4.2.1).
+    train_engine   — .update(batch) -> metrics dict or {} (handles its
+        own gradient accumulation); exposes .params.
+    prompt_stream(step) — prompts for one training step.
+    """
 
     def __init__(self, cfg: WorkflowConfig, *,
                  rollout_engine, train_engine,
                  prompt_stream: Callable[[int], List[Any]],
                  log: Optional[EventLog] = None):
-        """
-        rollout_engine — .generate(params, prompts, rng) ->
-            list of row dicts: {prompt, response, logprob, reward,
-            advantage, token_len}; one row per (prompt x G) sample.
-        train_engine   — .update(batch) -> metrics dict or {} (handles its
-            own gradient accumulation; applies the optimizer step when a
-            full global batch has streamed through); exposes .params.
-        prompt_stream(step) — prompts for one training step.
-        """
         self.cfg = cfg
         self.rollout_engine = rollout_engine
         self.train_engine = train_engine
-        self.prompt_stream = prompt_stream
-        self.log = log or EventLog()
+        columns = ("response", "logprob", "response_mask", "reward",
+                   "advantage") + tuple(cfg.extra_columns)
+        chunked = getattr(rollout_engine, "chunk_tokens", 0) > 0
 
-        total_rows = cfg.num_steps * cfg.samples_per_step
-        # partial rollout requeues continuations as fresh prompt rows —
-        # reserve capacity for every chunk of every group member
-        chunk = getattr(rollout_engine, "chunk_tokens", 0)
-        cont_mult = 0
-        if chunk:
-            max_new = getattr(rollout_engine, "max_new_tokens", chunk)
-            cont_mult = cfg.group_size * (-(-max_new // chunk))
-        self.tq = TransferQueue(
-            capacity=cfg.num_steps * cfg.prompts_per_step * (1 + cont_mult),
-            tasks={ROLLOUT_TASK: ["prompt"]},
-            num_storage_units=cfg.num_storage_units, policy=cfg.policy)
-        self._columns = ["prompt", "response", "logprob", "response_mask",
-                         "reward", "advantage"] + list(cfg.extra_columns)
-        self.xq = TransferQueue(
-            capacity=total_rows,
-            tasks={TRAIN_TASK: self._columns + ["version"]},
-            num_storage_units=cfg.num_storage_units, policy=cfg.policy)
-
-        self.channel = WeightChannel(cfg.channel_bandwidth_gbps)
-        self.sender = WeightSender(
-            self.channel, mode="async" if cfg.mode == "async" else "sync")
-        self.receivers = [
-            WeightReceiver(self.channel, train_engine.params, version=0)
-            for _ in range(cfg.num_rollout_workers)]
-        self.stagger = StaggeredUpdateGroup(self.receivers) \
-            if cfg.staggered else None
-
-        self.trainer_version = 0
-        self._stop = threading.Event()
-        self._step_done = threading.Condition()
-        self.staleness_seen: List[int] = []
-        self.metrics: List[dict] = []
-
-    # ------------------------------------------------------------------ #
-    # producers                                                           #
-    # ------------------------------------------------------------------ #
-
-    def _rollout_worker(self, widx: int) -> None:
-        name = f"rollout-{widx}"
-        recv = self.receivers[widx]
-        rng = np.random.default_rng(1234 + widx)
-        while not self._stop.is_set():
-            batch = self.tq.get(ROLLOUT_TASK, self.cfg.rollout_batch,
-                                consumer=name, timeout=0.05,
-                                allow_partial=True)
-            if batch is None:
-                if self.tq.controllers[ROLLOUT_TASK]._closed:
-                    return
-                continue
-
-            # ---- weight policy at the generation-iteration boundary ----
-            # (checked after the prompt fetch so a worker can never pair
-            # next-step prompts with pre-publish weights)
-            if self.cfg.mode == "async":
-                if self.stagger is not None:
-                    if recv.staged_version() > recv.version and \
-                            self.stagger.try_begin_update(widx):
-                        with self.log.span(name, "weight_sync"):
-                            recv.maybe_swap()
-                        self.stagger.end_update(widx)
-                else:
-                    recv.maybe_swap()          # delayed update: H2D only
-                floor = self.trainer_version - self.cfg.staleness
-                if recv.version < floor:       # staleness gate
-                    with self.log.span(name, "weight_sync"):
-                        recv.wait_and_swap(floor, timeout=30.0)
+        def _fused_generate(batch, *, params, rng, version=0, **kw):
+            if chunked:
+                rows, conts = rollout_engine.generate_chunked(
+                    params, batch["prompt"], rng, version=version)
             else:
-                # sync modes: strictly on-policy — wait for current weights
-                if recv.version < self.trainer_version:
-                    with self.log.span(name, "weight_sync"):
-                        recv.wait_and_swap(self.trainer_version, timeout=30.0)
+                rows = rollout_engine.generate(params, batch["prompt"], rng)
+                conts = []
+            return {"rows": rows, "requeue": conts}
 
-            chunked = getattr(self.rollout_engine, "chunk_tokens", 0) > 0
-            with self.log.span(name, "generate", version=recv.version,
-                               n=len(batch["prompt"])):
-                if chunked:
-                    # partial rollout: unfinished sequences re-enter the
-                    # prompt queue as continuations (k1.5-style, §4.2.1)
-                    rows, conts = self.rollout_engine.generate_chunked(
-                        recv.params, batch["prompt"], rng,
-                        version=recv.version)
-                else:
-                    rows = self.rollout_engine.generate(
-                        recv.params, batch["prompt"], rng)
-                    conts = []
-            if conts:
-                cidx = self.tq.next_indices(len(conts))
-                self.tq.put_batch(cidx, "prompt", conts,
-                                  token_lens=[len(c["tokens"])
-                                              for c in conts])
-            if not rows:
-                continue
-            idxs = self.xq.next_indices(len(rows))
-            for col in self._columns:
-                self.xq.put_batch(idxs, col, [r.get(col) for r in rows],
-                                  token_lens=[r.get("token_len", 0)
-                                              for r in rows])
-            self.xq.put_batch(idxs, "version", [recv.version] * len(rows))
+        def _fused_update(batch, **kw):
+            return train_engine.update(batch)
 
-    # ------------------------------------------------------------------ #
-    # consumer (trainer)                                                  #
-    # ------------------------------------------------------------------ #
+        graph = StageGraph(source_columns=("prompt",))
+        graph.add(StageSpec(ROLLOUT_TASK, inputs=("prompt",),
+                            outputs=columns + ("version",),
+                            engine="rollout", fn=_fused_generate,
+                            kind="generate"))
+        graph.add(StageSpec(TRAIN_TASK, inputs=columns + ("version",),
+                            engine="train", fn=_fused_update,
+                            kind="train", drives_steps=True))
+        self.runner = StageRunner(
+            cfg, graph,
+            engines={"rollout": rollout_engine, "train": train_engine},
+            prompt_stream=prompt_stream, log=log)
+        self.tq = self.runner.tq
+        self.log = self.runner.log
 
-    def _trainer(self) -> None:
-        name = "train-0"
-        cfg = self.cfg
-        for step in range(cfg.num_steps):
-            got = 0
-            while got < cfg.samples_per_step and not self._stop.is_set():
-                want = (cfg.samples_per_step - got if cfg.mode == "baseline"
-                        else min(cfg.train_micro_batch,
-                                 cfg.samples_per_step - got))
-                t0 = time.monotonic()
-                batch = self.xq.get(TRAIN_TASK, want, consumer=name,
-                                    timeout=60.0)
-                self.log.record(name, "wait", t0, time.monotonic())
-                if batch is None:
-                    self._stop.set()
-                    return
-                for v in batch["version"]:
-                    self.staleness_seen.append(self.trainer_version - v)
-                with self.log.span(name, "update", step=step,
-                                   n=len(batch["version"])):
-                    m = self.train_engine.update(batch)
-                if m:
-                    self.metrics.append({"step": step, **m})
-                got += len(batch["version"])
+    @property
+    def metrics(self) -> List[dict]:
+        return self.runner.metrics
 
-            # step complete -> publish new weights
-            with self.log.span(name, "weight_sync", version=step + 1):
-                self.sender.publish(self.train_engine.params, step + 1)
-                if cfg.mode != "async":
-                    self.sender.flush()
-            with self._step_done:
-                self.trainer_version = step + 1
-                self._step_done.notify_all()
-
-    # ------------------------------------------------------------------ #
-    # prompt feeder — per-mode release schedule                           #
-    # ------------------------------------------------------------------ #
-
-    def _feed_prompts(self) -> None:
-        cfg = self.cfg
-        ahead = cfg.staleness if cfg.mode == "async" else 0
-        for step in range(cfg.num_steps):
-            with self._step_done:
-                while self.trainer_version < step - ahead and \
-                        not self._stop.is_set():
-                    self._step_done.wait(0.05)
-            if self._stop.is_set():
-                break
-            prompts = self.prompt_stream(step)
-            idxs = self.tq.next_indices(len(prompts))
-            self.tq.put_batch(idxs, "prompt", prompts,
-                              token_lens=[len(p) if hasattr(p, "__len__")
-                                          else 0 for p in prompts])
-        self.tq.close_task(ROLLOUT_TASK)
+    @property
+    def staleness_seen(self) -> List[int]:
+        return self.runner.staleness_seen
 
     def run(self) -> WorkflowResult:
-        cfg = self.cfg
-        t0 = time.monotonic()
-        feeder = threading.Thread(target=self._feed_prompts, daemon=True)
-        workers = [threading.Thread(target=self._rollout_worker, args=(i,),
-                                    daemon=True)
-                   for i in range(cfg.num_rollout_workers)]
-        trainer = threading.Thread(target=self._trainer, daemon=True)
-        feeder.start()
-        for w in workers:
-            w.start()
-        trainer.start()
-        trainer.join()
-        self._stop.set()
-        self.tq.close()
-        self.xq.close()
-        for w in workers:
-            w.join(timeout=5.0)
-        feeder.join(timeout=5.0)
-        wall = time.monotonic() - t0
-        n = cfg.num_steps * cfg.samples_per_step
-        return WorkflowResult(
-            wall_time_s=wall, samples_trained=n, throughput=n / wall,
-            metrics=self.metrics, staleness_seen=self.staleness_seen,
-            log=self.log, bubble_fraction=self.log.bubble_fraction())
+        return self.runner.run()

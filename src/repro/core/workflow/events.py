@@ -1,11 +1,20 @@
 """Execution-timeline event log → Gantt chart / bubble-fraction analysis
-(paper Fig. 11)."""
+(paper Fig. 11).
+
+Stage-graph workers record spans under their stage name (``generate``,
+``ref_inference``, ``reward``, ``advantage``, ``values``, ``update``,
+``critic_update``, ...), so per-stage pipeline overlap is directly
+visible. Any kind that is not bookkeeping (``wait`` / ``weight_sync``)
+counts as busy time — custom stage names are busy by default.
+"""
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+IDLE_KINDS = ("wait", "weight_sync")
 
 
 @dataclass
@@ -61,17 +70,19 @@ class EventLog:
         with self._lock:
             return sorted({e.instance for e in self._events})
 
-    def busy_fraction(self, instance: str,
-                      busy_kinds=("generate", "update", "forward")) -> float:
+    def busy_fraction(self, instance: str, busy_kinds=None) -> float:
+        """busy_kinds=None counts every kind except IDLE_KINDS as busy."""
         ev = self.events(instance)
         if not ev:
             return 0.0
         span = max(e.end for e in ev) - min(e.start for e in ev)
-        busy = sum(e.duration for e in ev if e.kind in busy_kinds)
+        if busy_kinds is None:
+            busy = sum(e.duration for e in ev if e.kind not in IDLE_KINDS)
+        else:
+            busy = sum(e.duration for e in ev if e.kind in busy_kinds)
         return busy / max(span, 1e-9)
 
-    def bubble_fraction(self, busy_kinds=("generate", "update", "forward")
-                        ) -> Dict[str, float]:
+    def bubble_fraction(self, busy_kinds=None) -> Dict[str, float]:
         return {i: 1.0 - self.busy_fraction(i, busy_kinds)
                 for i in self.instances()}
 
@@ -79,8 +90,7 @@ class EventLog:
         return [dict(instance=e.instance, kind=e.kind, start=e.start,
                      end=e.end, **e.meta) for e in self.events()]
 
-    def render_gantt(self, width: int = 80,
-                     busy_kinds=("generate", "update", "forward")) -> str:
+    def render_gantt(self, width: int = 80, busy_kinds=None) -> str:
         """ASCII Gantt chart (Fig. 11 analogue)."""
         ev = self.events()
         if not ev:
@@ -89,7 +99,9 @@ class EventLog:
         t_max = max(e.end for e in ev)
         scale = width / max(t_max - t_min, 1e-9)
         sym = {"generate": "G", "update": "U", "forward": "F",
-               "weight_sync": "w", "wait": ".", "reward": "r"}
+               "weight_sync": "w", "wait": ".", "reward": "r",
+               "ref_inference": "R", "advantage": "A", "values": "V",
+               "critic_update": "C"}
         lines = []
         for inst in self.instances():
             row = [" "] * width

@@ -1,0 +1,560 @@
+"""Streaming stage-graph: composable multi-task RL dataflows (paper §3.3, §4.1).
+
+The paper's central architectural claim is that per-task TransferQueue
+controllers over a shared data plane let *arbitrary* RL dataflows
+(rollout, ref_inference, reward, critic/actor update, ...) stream and
+overlap automatically. This module is that claim as a subsystem:
+
+* :class:`StageSpec` — one named RL task: the columns it consumes, the
+  columns it writes, and the engine verb (``RLAdapter``) that does the
+  work.
+* :class:`StageGraph` — a validated DAG of stages over a single shared
+  column namespace. Topology checks (missing producers, duplicate
+  producers, cycles) run before anything is scheduled.
+* :class:`StageRunner` — compiles a graph onto ONE shared
+  :class:`TransferQueue` (one controller per stage, §3.3) and spawns
+  producer/consumer worker threads per stage. Rows flow column-by-column:
+  a stage's controller schedules a row the instant its required columns
+  are all present, so every intermediate task streams as its own pipeline
+  stage — no global-batch barriers anywhere between source and sink.
+
+Stage verbs return a plain dict with any of:
+
+* ``rows``     — new sample rows to append (dict column -> value); used by
+  the generate stage to fan a prompt out into G experience rows.
+* ``requeue``  — continuation items fed back into the source column
+  (partial rollout, §4.2.1).
+* ``updates``  — {column: [values]} written back onto the consumed rows.
+* ``writes``   — [(row_idx, column, value)] cross-row writes (e.g. GRPO
+  group advantages that complete on a later micro-batch).
+
+Workflow modes (baseline / streaming / async), the staleness gate,
+delayed parameter update and the per-mode prompt release schedule are
+owned by the runner, so every dataflow — built-in or user-registered via
+:func:`register_dataflow` — inherits the paper's §4.2 machinery.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.transfer_queue import TransferQueue
+from repro.core.workflow.events import EventLog
+from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
+                                             WeightChannel, WeightReceiver,
+                                             WeightSender)
+
+
+@dataclass
+class WorkflowConfig:
+    mode: str = "async"               # baseline | streaming | async
+    num_rollout_workers: int = 2
+    rollout_batch: int = 2            # prompts per generate() call
+    train_micro_batch: int = 4        # samples per trainer fetch
+    prompts_per_step: int = 4         # prompts consumed per training step
+    group_size: int = 4               # G responses per prompt (GRPO)
+    num_steps: int = 8
+    staleness: int = 1
+    staggered: bool = False           # sub-step async (Fig. 8d)
+    num_storage_units: int = 2
+    policy: str = "fifo"
+    channel_bandwidth_gbps: float = 0.0
+    extra_columns: tuple = ()      # e.g. ("ref_logprob",) for GRPO+KL
+
+    @property
+    def samples_per_step(self) -> int:
+        return self.prompts_per_step * self.group_size
+
+
+@dataclass
+class WorkflowResult:
+    wall_time_s: float
+    samples_trained: int
+    throughput: float                 # samples / s
+    metrics: List[dict]
+    staleness_seen: List[int]
+    log: EventLog
+    bubble_fraction: Dict[str, float] = field(default_factory=dict)
+    aux_metrics: Dict[str, List[dict]] = field(default_factory=dict)
+
+
+@dataclass
+class StageSpec:
+    """One RL task in the dataflow.
+
+    Parameters
+    ----------
+    name: task name; becomes the TransferQueue controller name.
+    inputs: columns that must be ready before a row is scheduled here.
+    outputs: columns this stage writes (row updates, deferred writes, or
+        columns of rows it spawns). ``version`` in a generate stage's
+        outputs is written by the runner with the producing weight version.
+    engine: key into the runner's engines dict.
+    verb: RLAdapter method name resolved on that engine (ignored if ``fn``
+        is given).
+    fn: direct callable ``fn(batch, **ctx) -> stage output dict`` —
+        used for pure-function stages (e.g. GAE) and legacy adapters.
+    kind: "generate" (weight-receiving producer), "transform" (streaming
+        map stage), "train" (the step-driving consumer), or
+        "train_stream" (accumulating consumer without step semantics,
+        e.g. critic updates).
+    batch_size: rows per fetch; 0 uses the runner default for the kind.
+    num_workers: worker threads; 0 uses the runner default for the kind.
+    drives_steps: the single stage whose consumption defines training
+        steps, weight publication and staleness accounting.
+    kw: extra keyword arguments forwarded to every verb/fn call.
+    """
+    name: str
+    inputs: Tuple[str, ...]
+    outputs: Tuple[str, ...] = ()
+    engine: str = ""
+    verb: str = ""
+    fn: Optional[Callable] = None
+    kind: str = "transform"
+    batch_size: int = 0
+    num_workers: int = 0
+    drives_steps: bool = False
+    kw: dict = field(default_factory=dict)
+
+
+class StageGraph:
+    """A DAG of :class:`StageSpec` over a shared column namespace.
+
+    ``source_columns`` are produced externally (the prompt feeder);
+    every other input column must be produced by exactly one stage.
+    """
+
+    def __init__(self, source_columns: Sequence[str] = ("prompt",)):
+        self.source_columns = tuple(source_columns)
+        self.stages: Dict[str, StageSpec] = {}
+
+    def add(self, spec: StageSpec) -> "StageGraph":
+        if spec.name in self.stages:
+            raise ValueError(f"duplicate stage {spec.name!r}")
+        self.stages[spec.name] = spec
+        return self
+
+    def tasks(self) -> Dict[str, List[str]]:
+        """{task_name: required columns} — the TransferQueue layout."""
+        return {n: list(s.inputs) for n, s in self.stages.items()}
+
+    def producers(self) -> Dict[str, str]:
+        """column -> producing stage; raises on duplicate producers."""
+        prod: Dict[str, str] = {}
+        for s in self.stages.values():
+            for c in s.outputs:
+                if c in prod:
+                    raise ValueError(
+                        f"column {c!r} produced by both {prod[c]!r} "
+                        f"and {s.name!r}")
+                if c in self.source_columns:
+                    raise ValueError(
+                        f"stage {s.name!r} produces source column {c!r}")
+                prod[c] = s.name
+        return prod
+
+    def validate(self) -> None:
+        prod = self.producers()
+        for s in self.stages.values():
+            for c in s.inputs:
+                if c not in self.source_columns and c not in prod:
+                    raise ValueError(
+                        f"stage {s.name!r} input column {c!r} has no "
+                        f"producer (source columns: {self.source_columns})")
+        self.topo_order()   # raises on cycles
+
+    def topo_order(self) -> List[StageSpec]:
+        """Kahn's algorithm over stage dependencies; raises on cycles."""
+        prod = self.producers()
+        deps: Dict[str, set] = {n: set() for n in self.stages}
+        for s in self.stages.values():
+            for c in s.inputs:
+                p = prod.get(c)
+                if p is not None and p != s.name:
+                    deps[s.name].add(p)
+                elif p == s.name:
+                    raise ValueError(
+                        f"stage {s.name!r} consumes its own output {c!r}")
+        order, ready = [], [n for n, d in deps.items() if not d]
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for m, d in deps.items():
+                d.discard(n)
+                if not d and m not in order and m not in ready:
+                    ready.append(m)
+        if len(order) != len(self.stages):
+            cyc = sorted(set(self.stages) - set(order))
+            raise ValueError(f"stage graph has a cycle involving {cyc}")
+        return [self.stages[n] for n in order]
+
+
+# -- dataflow registry (§5.1: algorithms declare graphs; users register) ----
+
+_DATAFLOWS: Dict[str, Callable[..., StageGraph]] = {}
+
+
+def register_dataflow(name: str, builder: Callable[..., StageGraph]) -> None:
+    """Register a named dataflow builder (``builder(**kw) -> StageGraph``)."""
+    _DATAFLOWS[name] = builder
+
+
+def build_dataflow(name: str, **kw) -> StageGraph:
+    if name not in _DATAFLOWS:
+        # built-in dataflows register on algorithm-module import; loaded
+        # lazily here so the core layer never hard-depends on the rl layer
+        import repro.rl  # noqa: F401
+    if name not in _DATAFLOWS:
+        raise KeyError(f"unknown dataflow {name!r}; "
+                       f"registered: {sorted(_DATAFLOWS)}")
+    return _DATAFLOWS[name](**kw)
+
+
+class StageRunner:
+    """Compiles a :class:`StageGraph` onto one shared TransferQueue and
+    drives it under the configured workflow mode.
+
+    Engines are passed as ``{key: engine}``; each stage resolves its verb
+    on ``engines[spec.engine]`` unless it carries a direct ``fn``.
+    The weight path (channel / sender / per-worker receivers, §4.2.3) is
+    wired between the step-driving train stage and the generate stage.
+    """
+
+    def __init__(self, cfg: WorkflowConfig, graph: StageGraph, *,
+                 engines: Dict[str, Any],
+                 prompt_stream: Callable[[int], List[Any]],
+                 log: Optional[EventLog] = None):
+        graph.validate()
+        self.cfg = cfg
+        self.graph = graph
+        self.engines = dict(engines)
+        self.prompt_stream = prompt_stream
+        self.log = log or EventLog()
+
+        gens = [s for s in graph.stages.values() if s.kind == "generate"]
+        drivers = [s for s in graph.stages.values() if s.drives_steps]
+        if len(gens) != 1:
+            raise ValueError(f"need exactly one generate stage, got "
+                             f"{[s.name for s in gens]}")
+        if len(drivers) != 1:
+            raise ValueError(f"need exactly one drives_steps stage, got "
+                             f"{[s.name for s in drivers]}")
+        self.gen_stage = gens[0]
+        self.driver_stage = drivers[0]
+        self.transform_stages = [s for s in graph.stages.values()
+                                 if s.kind == "transform"]
+        self.stream_train_stages = [s for s in graph.stages.values()
+                                    if s.kind == "train_stream"]
+
+        total_rows = cfg.num_steps * cfg.samples_per_step
+        # partial rollout requeues continuations as fresh source rows —
+        # reserve capacity for every chunk of every group member
+        gen_engine = self.engines.get(self.gen_stage.engine)
+        chunk = getattr(gen_engine, "chunk_tokens", 0)
+        cont_mult = 0
+        if chunk:
+            max_new = getattr(gen_engine, "max_new_tokens", chunk)
+            cont_mult = cfg.group_size * (-(-max_new // chunk))
+        capacity = (cfg.num_steps * cfg.prompts_per_step * (1 + cont_mult)
+                    + total_rows)
+        self.tq = TransferQueue(
+            capacity=capacity, tasks=graph.tasks(),
+            num_storage_units=cfg.num_storage_units, policy=cfg.policy)
+
+        self.n_gen_workers = (self.gen_stage.num_workers
+                              or cfg.num_rollout_workers)
+        driver_engine = self.engines[self.driver_stage.engine] \
+            if self.driver_stage.engine else None
+        init_weights = getattr(driver_engine, "params", None)
+        if init_weights is None:
+            raise ValueError(
+                f"drives_steps stage {self.driver_stage.name!r} must name "
+                f"an engine exposing .params — the step driver publishes "
+                f"weights to the generate stage at every step boundary")
+        self.channel = WeightChannel(cfg.channel_bandwidth_gbps)
+        self.sender = WeightSender(
+            self.channel, mode="async" if cfg.mode == "async" else "sync")
+        self.receivers = [
+            WeightReceiver(self.channel, init_weights, version=0)
+            for _ in range(self.n_gen_workers)]
+        self.stagger = StaggeredUpdateGroup(self.receivers) \
+            if cfg.staggered else None
+        self._driver_engine = driver_engine
+
+        self.trainer_version = 0
+        self._stop = threading.Event()
+        self._step_done = threading.Condition()
+        self.staleness_seen: List[int] = []
+        self.metrics: List[dict] = []
+        self.aux_metrics: Dict[str, List[dict]] = {}
+        self.samples_trained = 0
+        self._error: Optional[str] = None
+
+    def _fail(self, msg: str) -> None:
+        """Record a fatal stage error and stop the run; run() re-raises."""
+        if self._error is None:
+            self._error = msg
+        self._stop.set()
+        with self._step_done:
+            self._step_done.notify_all()
+
+    # ------------------------------------------------------------------ #
+    # helpers                                                             #
+    # ------------------------------------------------------------------ #
+
+    def _stage_fn(self, spec: StageSpec) -> Callable:
+        if spec.fn is not None:
+            return spec.fn
+        return getattr(self.engines[spec.engine], spec.verb)
+
+    @property
+    def _source_col(self) -> str:
+        return self.graph.source_columns[0]
+
+    # ------------------------------------------------------------------ #
+    # generate stage (weight-receiving producer)                          #
+    # ------------------------------------------------------------------ #
+
+    def _generate_worker(self, widx: int) -> None:
+        spec = self.gen_stage
+        name = f"rollout-{widx}"
+        recv = self.receivers[widx]
+        rng = np.random.default_rng(1234 + widx)
+        fn = self._stage_fn(spec)
+        bs = spec.batch_size or self.cfg.rollout_batch
+        out_cols = [c for c in spec.outputs if c != "version"]
+        while not self._stop.is_set():
+            batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
+                                allow_partial=True)
+            if batch is None:
+                if self.tq.controllers[spec.name]._closed:
+                    return
+                continue
+            batch.pop("indices", None)
+
+            # ---- weight policy at the generation-iteration boundary ----
+            # (checked after the prompt fetch so a worker can never pair
+            # next-step prompts with pre-publish weights)
+            if self.cfg.mode == "async":
+                if self.stagger is not None:
+                    if recv.staged_version() > recv.version and \
+                            self.stagger.try_begin_update(widx):
+                        with self.log.span(name, "weight_sync"):
+                            recv.maybe_swap()
+                        self.stagger.end_update(widx)
+                else:
+                    recv.maybe_swap()          # delayed update: H2D only
+                floor = self.trainer_version - self.cfg.staleness
+                if recv.version < floor:       # staleness gate
+                    with self.log.span(name, "weight_sync"):
+                        recv.wait_and_swap(floor, timeout=30.0)
+            else:
+                # sync modes: strictly on-policy — wait for current weights
+                if recv.version < self.trainer_version:
+                    with self.log.span(name, "weight_sync"):
+                        recv.wait_and_swap(self.trainer_version,
+                                           timeout=30.0)
+
+            n_in = len(batch[self._source_col])
+            with self.log.span(name, "generate", version=recv.version,
+                               n=n_in):
+                out = fn(batch, params=recv.params, rng=rng,
+                         version=recv.version, **spec.kw) or {}
+
+            conts = out.get("requeue") or []
+            if conts:
+                cidx = self.tq.next_indices(len(conts))
+                self.tq.put_batch(cidx, self._source_col, conts,
+                                  token_lens=[len(c["tokens"])
+                                              for c in conts])
+            rows = out.get("rows") or []
+            if not rows:
+                continue
+            idxs = self.tq.next_indices(len(rows))
+            if idxs[-1] >= self.tq.capacity:
+                # beyond-capacity rows would be silently unschedulable
+                # (controllers ignore out-of-range notifications) — fail
+                # loudly instead: the graph's fan-out exceeds what the
+                # cfg-derived capacity accounts for
+                self._fail(
+                    f"stage {spec.name!r} overflowed queue capacity "
+                    f"{self.tq.capacity} (row {idxs[-1]}): generate "
+                    f"fan-out exceeds cfg.group_size accounting")
+                return
+            token_lens = [r.get("token_len", 0) for r in rows]
+            for j, col in enumerate(out_cols):
+                self.tq.put_batch(idxs, col, [r.get(col) for r in rows],
+                                  token_lens=token_lens if j == 0 else None)
+            if "version" in spec.outputs:
+                self.tq.put_batch(idxs, "version",
+                                  [recv.version] * len(rows))
+
+    # ------------------------------------------------------------------ #
+    # transform stages (streaming map over rows)                          #
+    # ------------------------------------------------------------------ #
+
+    def _transform_worker(self, spec: StageSpec, widx: int) -> None:
+        name = f"{spec.name}-{widx}"
+        fn = self._stage_fn(spec)
+        bs = spec.batch_size or self.cfg.train_micro_batch
+        while True:
+            batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
+                                allow_partial=True)
+            if batch is None:
+                if self._stop.is_set() or \
+                        self.tq.controllers[spec.name]._closed:
+                    return
+                continue
+            idxs = batch.pop("indices")
+            with self.log.span(name, spec.name, n=len(idxs)):
+                out = fn(batch, indices=idxs, **spec.kw) or {}
+            for col, vals in (out.get("updates") or {}).items():
+                self.tq.put_batch(idxs, col, vals)
+            for i, col, v in (out.get("writes") or []):
+                self.tq.put(i, col, v)
+
+    # ------------------------------------------------------------------ #
+    # train stages (consumers)                                            #
+    # ------------------------------------------------------------------ #
+
+    def _driver(self) -> None:
+        """The step-driving consumer: defines training steps, publishes
+        weights, records observed staleness."""
+        spec = self.driver_stage
+        name = "train-0"
+        cfg = self.cfg
+        fn = self._stage_fn(spec)
+        for step in range(cfg.num_steps):
+            got = 0
+            while got < cfg.samples_per_step and not self._stop.is_set():
+                want = (cfg.samples_per_step - got
+                        if cfg.mode == "baseline"
+                        else min(cfg.train_micro_batch,
+                                 cfg.samples_per_step - got))
+                t0 = time.monotonic()
+                batch = self.tq.get(spec.name, want, consumer=name,
+                                    timeout=60.0)
+                self.log.record(name, "wait", t0, time.monotonic())
+                if batch is None:
+                    self._stop.set()
+                    return
+                batch.pop("indices", None)
+                versions = batch.get("version")
+                n = len(versions) if versions is not None \
+                    else len(batch[spec.inputs[0]])
+                for v in (versions or []):
+                    self.staleness_seen.append(self.trainer_version - v)
+                with self.log.span(name, "update", step=step, n=n):
+                    m = fn(batch)
+                if m:
+                    self.metrics.append({"step": step, **m})
+                got += n
+                self.samples_trained += n
+
+            # step complete -> publish new weights
+            with self.log.span(name, "weight_sync", version=step + 1):
+                self.sender.publish(self._driver_engine.params, step + 1)
+                if cfg.mode != "async":
+                    self.sender.flush()
+            with self._step_done:
+                self.trainer_version = step + 1
+                self._step_done.notify_all()
+
+    def _stream_train_worker(self, spec: StageSpec) -> None:
+        """Accumulating consumer without step semantics (e.g. the critic):
+        streams micro-batches until the run stops, then drains."""
+        name = f"{spec.name}-0"
+        fn = self._stage_fn(spec)
+        bs = spec.batch_size or self.cfg.train_micro_batch
+        sink = self.aux_metrics.setdefault(spec.name, [])
+        while True:
+            batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
+                                allow_partial=True)
+            if batch is None:
+                if self._stop.is_set() or \
+                        self.tq.controllers[spec.name]._closed:
+                    return
+                continue
+            batch.pop("indices", None)
+            n = len(batch[spec.inputs[0]])
+            with self.log.span(name, spec.name, n=n):
+                m = fn(batch)
+            if m:
+                sink.append(m)
+
+    # ------------------------------------------------------------------ #
+    # prompt feeder — per-mode release schedule                           #
+    # ------------------------------------------------------------------ #
+
+    def _feed_prompts(self) -> None:
+        cfg = self.cfg
+        ahead = cfg.staleness if cfg.mode == "async" else 0
+        for step in range(cfg.num_steps):
+            with self._step_done:
+                while self.trainer_version < step - ahead and \
+                        not self._stop.is_set():
+                    self._step_done.wait(0.05)
+            if self._stop.is_set():
+                break
+            prompts = self.prompt_stream(step)
+            idxs = self.tq.next_indices(len(prompts))
+            self.tq.put_batch(idxs, self._source_col, prompts,
+                              token_lens=[len(p) if hasattr(p, "__len__")
+                                          else 0 for p in prompts])
+        self.tq.close_task(self.gen_stage.name)
+
+    # ------------------------------------------------------------------ #
+    # lifecycle                                                           #
+    # ------------------------------------------------------------------ #
+
+    def _guard(self, target, *args) -> None:
+        """Worker-thread wrapper: a stage exception aborts the whole run
+        loudly instead of dying as a silent daemon thread."""
+        try:
+            target(*args)
+        except Exception as e:                       # noqa: BLE001
+            self._fail(f"stage worker {target.__name__}{args!r} "
+                       f"failed: {e!r}")
+
+    def run(self) -> WorkflowResult:
+        t0 = time.monotonic()
+        feeder = threading.Thread(target=self._guard,
+                                  args=(self._feed_prompts,), daemon=True)
+        workers = [threading.Thread(target=self._guard,
+                                    args=(self._generate_worker, i),
+                                    daemon=True)
+                   for i in range(self.n_gen_workers)]
+        for spec in self.transform_stages:
+            for w in range(spec.num_workers or 1):
+                workers.append(threading.Thread(
+                    target=self._guard,
+                    args=(self._transform_worker, spec, w), daemon=True))
+        for spec in self.stream_train_stages:
+            workers.append(threading.Thread(
+                target=self._guard, args=(self._stream_train_worker, spec),
+                daemon=True))
+        trainer = threading.Thread(target=self._guard, args=(self._driver,),
+                                   daemon=True)
+        feeder.start()
+        for w in workers:
+            w.start()
+        trainer.start()
+        trainer.join()
+        self._stop.set()
+        self.tq.close()
+        for w in workers:
+            w.join(timeout=5.0)
+        feeder.join(timeout=5.0)
+        if self._error is not None:
+            raise RuntimeError(f"stage-graph run failed: {self._error}")
+        wall = time.monotonic() - t0
+        n = self.samples_trained
+        return WorkflowResult(
+            wall_time_s=wall, samples_trained=n, throughput=n / wall,
+            metrics=self.metrics, staleness_seen=self.staleness_seen,
+            log=self.log, bubble_fraction=self.log.bubble_fraction(),
+            aux_metrics=self.aux_metrics)

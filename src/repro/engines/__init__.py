@@ -1,6 +1,7 @@
 from repro.engines.adapter import EngineRegistry, RLAdapter
 from repro.engines.rollout_engine import JaxRolloutEngine
-from repro.engines.train_engine import JaxTrainEngine
+from repro.engines.train_engine import (JaxCriticEngine, JaxTrainEngine,
+                                        pack_rows)
 
 __all__ = ["RLAdapter", "EngineRegistry", "JaxRolloutEngine",
-           "JaxTrainEngine"]
+           "JaxTrainEngine", "JaxCriticEngine", "pack_rows"]

@@ -1,24 +1,33 @@
 """JAX rollout engine — the inference-cluster backend.
 
-Implements the AsyncRLRunner producer protocol: ``generate(params,
-prompts, rng)`` samples G responses per prompt with the KV-cache decode
-loop, scores them with the rule-based reward, computes GRPO group
-advantages, and returns one experience row per sample (the columns the
-actor_update task consumes through TransferQueue).
+Implements the inference-side ``RLAdapter`` verbs as separately-streamed
+stage-graph tasks (paper §3.3 / §5.2):
 
-**Partial rollout** (k1.5-style, paper §4.2.1): with ``chunk_tokens`` set,
-each generate() call advances every sequence by at most ``chunk_tokens``
-tokens; unfinished sequences are handed back as *continuations* that
-re-enter TransferQueue and resume on a later call — possibly under newer
-weights (sub-step asynchrony). Behavior logprobs of already-generated
-tokens are preserved verbatim (the behavior policy is the chunk-wise
-mixture, exactly what old_logprob must record); GRPO group advantages are
-emitted only once every member of a group has finished.
+* ``generate_sequences`` — sample G responses per prompt with the
+  KV-cache decode loop and emit one experience row per sample (columns:
+  response / logprob / response_mask / response_ids / group / answer).
+  With ``chunk_tokens`` set it runs partial rollout (k1.5-style, §4.2.1):
+  each call advances every sequence by at most ``chunk_tokens`` tokens and
+  unfinished sequences are handed back as *continuations* that re-enter
+  TransferQueue and resume on a later call — possibly under newer weights
+  (sub-step asynchrony). Behavior logprobs of already-generated tokens
+  are preserved verbatim (the behavior policy is the chunk-wise mixture,
+  exactly what old_logprob must record).
+* ``compute_log_prob`` — the reference-inference task: per-token frozen
+  reference logprobs for the KL penalty.
+* ``compute_rewards`` — the reward/advantage task: rule-based rewards per
+  row plus (for GRPO) group-relative advantages, emitted as deferred
+  writes once every member of a group has streamed through.
+
+The fused ``generate``/``generate_chunked`` entry points (generation +
+reference + reward + advantage in one call) remain as the legacy
+two-task protocol used by ``AsyncRLRunner`` and the fused-vs-staged
+benchmarks; they are thin compositions of the staged verbs above.
 """
 from __future__ import annotations
 
 import threading
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -33,10 +42,9 @@ class JaxRolloutEngine(RLAdapter):
     def __init__(self, cfg, *, group_size: int = 4, max_new_tokens: int = 8,
                  temperature: float = 1.0, reward_fn=math_reward,
                  ref_params=None, chunk_tokens: int = 0):
-        """ref_params: frozen reference policy — when set, the engine also
-        runs the *reference inference* RL task (per-token ref logprobs for
-        the KL penalty), adding the third task of the paper's GRPO+KL
-        dataflow through TransferQueue.
+        """ref_params: frozen reference policy — enables the
+        ``compute_log_prob`` reference-inference task (per-token ref
+        logprobs for the KL penalty).
 
         chunk_tokens > 0 enables partial rollout (see module docstring)."""
         self.cfg = cfg
@@ -46,65 +54,140 @@ class JaxRolloutEngine(RLAdapter):
         self.reward_fn = reward_fn
         self.ref_params = ref_params
         self.chunk_tokens = chunk_tokens
-        self._groups: dict = {}          # group id -> finished members
+        self._groups: dict = {}          # fused path: gid -> finished members
+        self._reward_groups: dict = {}   # staged path: gid -> (member, idx, r)
         self._glock = threading.Lock()
         self._gid = 0
-
-    # AsyncRLRunner protocol -------------------------------------------------
-    def generate(self, params, prompts: List[dict], rng) -> List[dict]:
-        """prompts: [{"tokens": np.ndarray, "answer": int, ...}] ->
-        one row per (prompt x G) sample."""
-        G = self.group_size
-        flat = [p["tokens"] for p in prompts for _ in range(G)]
-        seed = int(rng.integers(0, 2**31 - 1))
-        outs = sample_generate(params, self.cfg, flat, seed,
-                               max_new_tokens=self.max_new_tokens,
-                               temperature=self.temperature)
-        ref_lps = None
-        if self.ref_params is not None:
-            import jax.numpy as jnp
-
-            from repro.models import forward
-            from repro.rl.loss import token_logprobs
-            toks = jnp.asarray(np.stack([o["tokens"] for o in outs]))
-            logits, _ = forward(self.ref_params, self.cfg, {"tokens": toks})
-            lp, _ = token_logprobs(logits[:, :-1], toks[:, 1:])
-            ref_lps = np.concatenate(
-                [np.zeros((lp.shape[0], 1), np.float32), np.asarray(lp)], 1)
-        rows = []
-        for pi, p in enumerate(prompts):
-            group = outs[pi * G:(pi + 1) * G]
-            rewards = np.asarray([self.reward_fn(p["answer"],
-                                                 o["response_ids"])
-                                  for o in group], np.float32)
-            advs = np.asarray(grpo_advantages(rewards))
-            for gi, (o, r, a) in enumerate(zip(group, rewards, advs)):
-                row = dict(
-                    prompt=p, response=o["tokens"],
-                    logprob=o["logprobs"],
-                    response_mask=o["response_mask"],
-                    reward=float(r), advantage=float(a),
-                    token_len=int(o["response_mask"].sum()))
-                if ref_lps is not None:
-                    row["ref_logprob"] = ref_lps[pi * G + gi]
-                rows.append(row)
-        return rows
-
-    def generate_sequences(self, prompts, **kw):
-        raise RuntimeError("use generate(params, prompts, rng)")
-
-    # -- partial rollout (paper §4.2.1 / k1.5) ------------------------------
 
     def _new_gid(self) -> int:
         with self._glock:
             self._gid += 1
             return self._gid
 
-    def generate_chunked(self, params, items: List[dict], rng, *,
-                         version: int = 0):
+    # ------------------------------------------------------------------ #
+    # staged verbs (stage-graph tasks)                                    #
+    # ------------------------------------------------------------------ #
+
+    def _sample_rows(self, params, prompts: List[dict], rng) -> List[dict]:
+        """Sample prompts x G; one staged experience row per sample (no
+        reward/advantage — those stream through their own stages)."""
+        G = self.group_size
+        flat = [p["tokens"] for p in prompts for _ in range(G)]
+        seed = int(rng.integers(0, 2**31 - 1))
+        outs = sample_generate(params, self.cfg, flat, seed,
+                               max_new_tokens=self.max_new_tokens,
+                               temperature=self.temperature)
+        rows = []
+        for pi, p in enumerate(prompts):
+            gid = self._new_gid()
+            for m in range(G):
+                o = outs[pi * G + m]
+                rows.append(dict(
+                    prompt=p, response=o["tokens"], logprob=o["logprobs"],
+                    response_mask=o["response_mask"],
+                    response_ids=o["response_ids"],
+                    group=(gid, m, G), answer=p["answer"],
+                    token_len=int(o["response_mask"].sum())))
+        return rows
+
+    def generate_sequences(self, batch, *, params, rng, version: int = 0,
+                           **kw):
+        """Stage verb: batch["prompt"] -> {"rows": [...], "requeue": [...]}.
+
+        Chunked engines emit each finished group member immediately — the
+        downstream reward stage owns group completion, so members stream
+        out without waiting for their group."""
+        prompts = batch["prompt"]
+        if self.chunk_tokens:
+            finished, conts = self._advance_chunks(params, prompts, rng,
+                                                   version=version)
+            return {"rows": [self._member_row(s) for s in finished],
+                    "requeue": conts}
+        return {"rows": self._sample_rows(params, prompts, rng)}
+
+    def _ref_logprobs(self, responses, params=None) -> List[np.ndarray]:
+        """Per-token logprobs of the frozen reference over full sequences
+        (position 0 gets 0.0 — no prediction for the first token)."""
+        import jax.numpy as jnp
+
+        from repro.models import forward
+        from repro.rl.loss import token_logprobs
+        params = self.ref_params if params is None else params
+        arrs = [np.asarray(t) for t in responses]
+        S = max(len(a) for a in arrs)
+        toks = np.zeros((len(arrs), S), np.int32)
+        for i, a in enumerate(arrs):
+            toks[i, :len(a)] = a
+        logits, _ = forward(params, self.cfg, {"tokens": jnp.asarray(toks)})
+        lp, _ = token_logprobs(logits[:, :-1], toks[:, 1:])
+        lp = np.asarray(lp)
+        return [np.concatenate([[0.0], lp[i, :len(a) - 1]]).astype(
+            np.float32) for i, a in enumerate(arrs)]
+
+    def compute_log_prob(self, batch, *, params=None, **kw):
+        """Stage verb (reference inference): writes ``ref_logprob``."""
+        return {"updates": {"ref_logprob":
+                            self._ref_logprobs(batch["response"],
+                                               params=params)}}
+
+    def compute_rewards(self, batch, *, indices=None,
+                        group_advantage: bool = True, **kw):
+        """Stage verb: rule-based reward per row; with ``group_advantage``
+        (GRPO) also buffers rewards per group and emits group-relative
+        advantages as deferred writes once all G members streamed in."""
+        rewards = [float(self.reward_fn(a, rid))
+                   for a, rid in zip(batch["answer"], batch["response_ids"])]
+        out = {"updates": {"reward": rewards}}
+        if not group_advantage:
+            return out
+        writes = []
+        with self._glock:
+            for idx, g, r in zip(indices, batch["group"], rewards):
+                gid, member, G = g
+                buf = self._reward_groups.setdefault(gid, [])
+                buf.append((member, idx, r))
+                if len(buf) == G:
+                    buf.sort()
+                    advs = np.asarray(grpo_advantages(
+                        np.asarray([b[2] for b in buf], np.float32)))
+                    writes += [(i, "advantage", float(a))
+                               for (_, i, _), a in zip(buf, advs)]
+                    del self._reward_groups[gid]
+        out["writes"] = writes
+        return out
+
+    # ------------------------------------------------------------------ #
+    # fused legacy protocol (AsyncRLRunner / fused-vs-staged benchmark)   #
+    # ------------------------------------------------------------------ #
+
+    def generate(self, params, prompts: List[dict], rng) -> List[dict]:
+        """Fused: generation + reference + reward + advantage in one call.
+        prompts: [{"tokens": np.ndarray, "answer": int, ...}] ->
+        one row per (prompt x G) sample."""
+        rows = self._sample_rows(params, prompts, rng)
+        ref_lps = self._ref_logprobs([r["response"] for r in rows]) \
+            if self.ref_params is not None else None
+        G = self.group_size
+        for gi in range(0, len(rows), G):
+            group = rows[gi:gi + G]
+            rewards = np.asarray([self.reward_fn(r["answer"],
+                                                 r["response_ids"])
+                                  for r in group], np.float32)
+            advs = np.asarray(grpo_advantages(rewards))
+            for j, (r, rew, a) in enumerate(zip(group, rewards, advs)):
+                r["reward"] = float(rew)
+                r["advantage"] = float(a)
+                if ref_lps is not None:
+                    r["ref_logprob"] = ref_lps[gi + j]
+        return rows
+
+    # -- partial rollout (paper §4.2.1 / k1.5) ------------------------------
+
+    def _advance_chunks(self, params, items: List[dict], rng, *,
+                        version: int = 0):
         """items: fresh prompt dicts or continuation dicts (``_cont``).
-        Returns (finished_rows, continuations). Each call advances every
-        sequence by at most ``chunk_tokens`` tokens."""
+        Advances every sequence by at most ``chunk_tokens`` tokens.
+        Returns (finished_members, continuations)."""
         C = self.chunk_tokens or self.max_new_tokens
         seqs = []
         for it in items:
@@ -147,9 +230,27 @@ class JaxRolloutEngine(RLAdapter):
                 finished_members.append(s)
             else:
                 continuations.append(s)
+        return finished_members, continuations
 
-        rows = self._emit_finished_groups(finished_members)
-        return rows, continuations
+    def _member_row(self, s: dict) -> dict:
+        """Finished chunked member -> staged experience row."""
+        p = s["prompt"]
+        plen = len(np.asarray(p["tokens"]))
+        mask = np.zeros(len(s["tokens"]), np.float32)
+        mask[plen:] = 1.0
+        return dict(prompt=p, response=s["tokens"], logprob=s["logprobs"],
+                    response_mask=mask, response_ids=s["tokens"][plen:],
+                    group=(s["gid"], s["member"], self.group_size),
+                    answer=p["answer"], token_len=int(s["gen_len"]),
+                    chunk_versions=s["versions"])
+
+    def generate_chunked(self, params, items: List[dict], rng, *,
+                         version: int = 0):
+        """Fused chunked path: group advantages are emitted only once every
+        member of a group has finished. Returns (rows, continuations)."""
+        finished, conts = self._advance_chunks(params, items, rng,
+                                               version=version)
+        return self._emit_finished_groups(finished), conts
 
     def _emit_finished_groups(self, members: List[dict]) -> List[dict]:
         """Buffer finished members per group; once all G are in, compute

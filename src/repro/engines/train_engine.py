@@ -1,9 +1,17 @@
-"""JAX training engine — the training-cluster backend.
+"""JAX training engines — the training-cluster backend.
 
-Implements the AsyncRLRunner consumer protocol: ``update(batch)``
-accumulates GRPO gradients over streamed micro-batches and applies the
-AdamW step once a full global batch has passed through (so streaming
-micro-consumption is algorithm-identical to whole-batch training).
+``JaxTrainEngine`` implements the actor-update stage verb
+(``update_actor``): it accumulates gradients over streamed micro-batches
+and applies the AdamW step once a full global batch has passed through
+(so streaming micro-consumption is algorithm-identical to whole-batch
+training). ``algorithm="grpo"`` uses the GRPO loss over scalar group
+advantages; ``algorithm="ppo"`` uses the actor-only PPO loss over
+per-token GAE advantages.
+
+``JaxCriticEngine`` implements the PPO value-side stage verbs:
+``compute_values`` (the streaming critic-inference task) and
+``update_critic`` (the streaming critic-update task), with the same
+gradient-accumulation contract as the actor.
 """
 from __future__ import annotations
 
@@ -16,14 +24,63 @@ import numpy as np
 
 from repro.engines.adapter import EngineRegistry, RLAdapter
 from repro.rl.grpo import GRPOConfig, grpo_loss_fn
+from repro.rl.ppo import (PPOConfig, critic_forward, ppo_actor_loss_fn,
+                          ppo_critic_loss_fn)
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_state import TrainState
+
+
+def pack_rows(batch: Dict[str, list], seq_len: int) -> dict:
+    """Variable-length rows from TransferQueue -> fixed-shape jnp batch.
+
+    Packs whatever per-token columns are present (logprob, ref_logprob,
+    returns, values) plus the advantage — per-token (PPO/GAE) or scalar
+    per-sample (GRPO) — so one packer serves every train-side stage."""
+    n = len(batch["response"])
+    S = seq_len
+
+    def pad2(rows, dtype=np.float32):
+        a = np.zeros((n, S), dtype)
+        for i, r in enumerate(rows):
+            r = np.asarray(r)[:S]
+            a[i, :len(r)] = r
+        return a
+
+    tokens = pad2(batch["response"], np.int32)
+    if "response_mask" in batch:
+        masks = pad2(batch["response_mask"])
+    else:
+        masks = np.zeros((n, S), np.float32)
+        for i, r in enumerate(batch["response"]):
+            masks[i, :min(S, len(np.asarray(r)))] = 1.0
+    out = {"tokens": jnp.asarray(tokens),
+           "response_mask": jnp.asarray(masks)}
+    if "logprob" in batch:
+        out["old_logprob"] = jnp.asarray(pad2(batch["logprob"]))
+    if "advantage" in batch:
+        adv = batch["advantage"]
+        if n and np.ndim(np.asarray(adv[0])) >= 1:   # per-token (PPO)
+            out["advantage"] = jnp.asarray(pad2(adv))
+        else:                                         # scalar (GRPO)
+            out["advantage"] = jnp.asarray(np.asarray(adv, np.float32))
+    for col, key in (("ref_logprob", "ref_logprob"),
+                     ("returns", "returns"), ("values", "old_values")):
+        if col in batch:
+            out[key] = jnp.asarray(pad2(batch[col]))
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rl"))
 def _grad_microbatch(params, cfg, rl, batch):
     (_, metrics), grads = jax.value_and_grad(grpo_loss_fn, has_aux=True)(
         params, cfg, batch, rl)
+    return grads, metrics
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl"))
+def _ppo_actor_grad_microbatch(params, cfg, rl, batch):
+    (_, metrics), grads = jax.value_and_grad(
+        ppo_actor_loss_fn, has_aux=True)(params, cfg, batch, rl)
     return grads, metrics
 
 
@@ -34,13 +91,13 @@ def _apply(state: TrainState, grads, n_micro, opt_cfg):
     return new_state, gnorm
 
 
-@EngineRegistry.register("jax_train")
-class JaxTrainEngine(RLAdapter):
-    def __init__(self, cfg, init_params, *, rl: Optional[GRPOConfig] = None,
-                 opt: Optional[OptimizerConfig] = None,
-                 global_batch: int = 16, seq_len: int = 32):
+class _AccumulatingEngine(RLAdapter):
+    """Shared gradient-accumulation consumer: collect micro-batch grads
+    until a full global batch streamed through, then step the optimizer."""
+
+    def __init__(self, cfg, init_params, *, opt: Optional[OptimizerConfig],
+                 global_batch: int, seq_len: int):
         self.cfg = cfg
-        self.rl = rl or GRPOConfig()
         self.opt_cfg = opt or OptimizerConfig(lr=3e-4, warmup_steps=2)
         self.state = TrainState.create(init_params)
         self.global_batch = global_batch
@@ -50,48 +107,21 @@ class JaxTrainEngine(RLAdapter):
         self._accum_metrics: List[dict] = []
         self.version = 0
 
-    # AsyncRLRunner protocol --------------------------------------------------
     @property
     def params(self):
         return self.state.params
 
-    def _pack(self, batch: Dict[str, list]) -> dict:
-        """Rows from TransferQueue -> fixed-shape jnp batch."""
-        n = len(batch["response"])
-        S = self.seq_len
-        tokens = np.zeros((n, S), np.int32)
-        masks = np.zeros((n, S), np.float32)
-        old_lp = np.zeros((n, S), np.float32)
-        adv = np.asarray(batch["advantage"], np.float32)
-        for i in range(n):
-            t = np.asarray(batch["response"][i])[:S]
-            tokens[i, :len(t)] = t
-            m = np.asarray(batch["response_mask"][i])[:S] \
-                if "response_mask" in batch else np.ones(len(t))
-            masks[i, :len(m)] = m
-            lp = np.asarray(batch["logprob"][i])[:S]
-            old_lp[i, :len(lp)] = lp
-        out = {"tokens": jnp.asarray(tokens),
-               "response_mask": jnp.asarray(masks),
-               "old_logprob": jnp.asarray(old_lp),
-               "advantage": jnp.asarray(adv)}
-        if "ref_logprob" in batch:
-            ref = np.zeros((n, S), np.float32)
-            for i in range(n):
-                rl = np.asarray(batch["ref_logprob"][i])[:S]
-                ref[i, :len(rl)] = rl
-            out["ref_logprob"] = jnp.asarray(ref)
-        return out
+    def _grad(self, jb):
+        raise NotImplementedError
 
-    def update(self, batch: Dict[str, list]) -> dict:
-        jb = self._pack(batch)
-        grads, metrics = _grad_microbatch(self.state.params, self.cfg,
-                                          self.rl, jb)
+    def _consume(self, batch: Dict[str, list]) -> dict:
+        jb = pack_rows(batch, self.seq_len)
+        grads, metrics = self._grad(jb)
         if self._accum is None:
             self._accum = grads
         else:
             self._accum = jax.tree.map(jnp.add, self._accum, grads)
-        self._accum_n += len(batch["advantage"])
+        self._accum_n += len(batch["response"])
         self._accum_metrics.append(
             {k: float(v) for k, v in metrics.items()})
 
@@ -102,18 +132,94 @@ class JaxTrainEngine(RLAdapter):
             self.version += 1
             out = {k: float(np.mean([m[k] for m in self._accum_metrics]))
                    for k in self._accum_metrics[0]}
-            out.update(grad_norm=float(gnorm),
-                       mean_reward=float(np.mean(batch["reward"])))
+            out["grad_norm"] = float(gnorm)
+            if "reward" in batch:
+                out["mean_reward"] = float(np.mean(batch["reward"]))
             self._accum, self._accum_n = None, 0
             self._accum_metrics = []
             return out
         return {}
-
-    def update_actor(self, batch, **kw):
-        return self.update(batch)
 
     def get_weights(self):
         return self.state.params
 
     def load_weights(self, weights) -> None:
         self.state = self.state._replace(params=weights)
+
+
+@EngineRegistry.register("jax_train")
+class JaxTrainEngine(_AccumulatingEngine):
+    """Actor-update stage engine (GRPO or PPO-actor loss)."""
+
+    def __init__(self, cfg, init_params, *, rl=None,
+                 opt: Optional[OptimizerConfig] = None,
+                 global_batch: int = 16, seq_len: int = 32,
+                 algorithm: str = "grpo"):
+        super().__init__(cfg, init_params, opt=opt,
+                         global_batch=global_batch, seq_len=seq_len)
+        self.algorithm = algorithm
+        if algorithm == "ppo":
+            self.rl = rl or PPOConfig()
+            self._grad_fn = _ppo_actor_grad_microbatch
+        else:
+            self.rl = rl or GRPOConfig()
+            self._grad_fn = _grad_microbatch
+
+    def _grad(self, jb):
+        return self._grad_fn(self.state.params, self.cfg, self.rl, jb)
+
+    def update(self, batch: Dict[str, list]) -> dict:
+        return self._consume(batch)
+
+    def update_actor(self, batch, **kw):
+        return self._consume(batch)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _critic_values(critic_params, cfg, tokens):
+    return critic_forward(critic_params, cfg, tokens)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "rl"))
+def _critic_grad_microbatch(critic_params, cfg, rl, batch):
+    (_, metrics), grads = jax.value_and_grad(
+        ppo_critic_loss_fn, has_aux=True)(critic_params, cfg, batch, rl)
+    return grads, metrics
+
+
+@EngineRegistry.register("jax_critic")
+class JaxCriticEngine(_AccumulatingEngine):
+    """PPO value-side stage engine: streaming critic inference
+    (``compute_values``) and critic updates (``update_critic``)."""
+
+    def __init__(self, cfg, critic_params, *, rl: Optional[PPOConfig] = None,
+                 opt: Optional[OptimizerConfig] = None,
+                 global_batch: int = 16, seq_len: int = 32):
+        super().__init__(cfg, critic_params, opt=opt,
+                         global_batch=global_batch, seq_len=seq_len)
+        self.rl = rl or PPOConfig()
+
+    def compute_values(self, batch, **kw):
+        """Stage verb: per-token values over each row's full sequence
+        (padded to a multiple of 8 for XLA compile reuse)."""
+        arrs = [np.asarray(r) for r in batch["response"]]
+        S = max(len(a) for a in arrs)
+        S = ((S + 7) // 8) * 8
+        toks = np.zeros((len(arrs), S), np.int32)
+        for i, a in enumerate(arrs):
+            toks[i, :len(a)] = a
+        vals = np.asarray(_critic_values(self.state.params, self.cfg,
+                                         jnp.asarray(toks)))
+        return {"updates": {"values":
+                            [vals[i, :len(a)].astype(np.float32)
+                             for i, a in enumerate(arrs)]}}
+
+    def _grad(self, jb):
+        return _critic_grad_microbatch(self.state.params, self.cfg,
+                                       self.rl, jb)
+
+    def update_critic(self, batch, **kw):
+        return self._consume(batch)
+
+    def update(self, batch):
+        return self._consume(batch)

@@ -3,6 +3,14 @@
 The jitted ``grpo_train_step`` is also what the train_4k dry-run lowers:
 forward + clipped policy loss (+ optional KL-to-reference) + backward +
 AdamW — the paper-representative training step.
+
+``grpo_dataflow`` declares GRPO as a streaming stage graph (§3.3/§4.1):
+
+    generate → [ref_inference] → reward/advantage → actor_update
+
+Each task streams independently through one shared TransferQueue; group
+advantages are emitted by the reward stage as deferred writes once every
+member of a group has streamed through.
 """
 from __future__ import annotations
 
@@ -13,6 +21,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.workflow.stage_graph import (StageGraph, StageSpec,
+                                             register_dataflow)
 from repro.models import forward
 from repro.rl.loss import clipped_policy_loss, kl_penalty, token_logprobs
 from repro.training.optimizer import OptimizerConfig
@@ -82,3 +92,33 @@ def grpo_grad_step(params, cfg, rl: GRPOConfig, batch):
     (_, metrics), grads = jax.value_and_grad(grpo_loss_fn, has_aux=True)(
         params, cfg, batch, rl)
     return grads, metrics
+
+
+def grpo_dataflow(*, kl_coef: float = 0.0, **_) -> StageGraph:
+    """GRPO as a streaming stage graph (see module docstring). With
+    ``kl_coef > 0`` the frozen-reference inference runs as its own
+    streaming task between generation and the actor update."""
+    g = StageGraph(source_columns=("prompt",))
+    g.add(StageSpec("generate", inputs=("prompt",),
+                    outputs=("response", "logprob", "response_mask",
+                             "response_ids", "group", "answer", "version"),
+                    engine="rollout", verb="generate_sequences",
+                    kind="generate"))
+    if kl_coef > 0:
+        g.add(StageSpec("ref_inference", inputs=("response",),
+                        outputs=("ref_logprob",),
+                        engine="rollout", verb="compute_log_prob"))
+    g.add(StageSpec("reward", inputs=("response_ids", "answer", "group"),
+                    outputs=("reward", "advantage"),
+                    engine="rollout", verb="compute_rewards"))
+    train_in = ["response", "logprob", "response_mask", "reward",
+                "advantage", "version"]
+    if kl_coef > 0:
+        train_in.append("ref_logprob")
+    g.add(StageSpec("actor_update", inputs=tuple(train_in),
+                    engine="actor", verb="update_actor",
+                    kind="train", drives_steps=True))
+    return g
+
+
+register_dataflow("grpo", grpo_dataflow)

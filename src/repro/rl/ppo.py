@@ -1,7 +1,17 @@
 """PPO actor + critic update ("under development" in the paper §6.1 —
 completed here). The critic is a value head over the same backbone
 trunk; reference/reward models plug in as additional RL tasks through
-TransferQueue exactly like the GRPO flow."""
+TransferQueue exactly like the GRPO flow.
+
+``ppo_dataflow`` declares PPO as a streaming stage graph (§3.3/§4.1):
+
+    generate → [ref_inference] → values → reward → advantage(GAE)
+             → actor_update + critic_update
+
+Each task streams independently through one shared TransferQueue; the
+actor update drives training steps and weight publication while the
+critic update streams alongside as its own consumer (``train_stream``).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,9 +19,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.workflow.stage_graph import (StageGraph, StageSpec,
+                                             register_dataflow)
 from repro.models import forward, init_params
 from repro.models.layers import dense, init_dense, normal_init
+from repro.rl.advantage import gae
 from repro.rl.loss import (clipped_policy_loss, kl_penalty, token_logprobs,
                            value_loss)
 from repro.training.optimizer import OptimizerConfig
@@ -69,6 +83,110 @@ def ppo_loss_fn(actor_params, critic_params, cfg, batch, rl: PPOConfig):
             jnp.maximum(mask.sum(), 1.0)
     return loss, {"loss": loss, "policy_loss": pl_loss, "value_loss": vf,
                   **stats}
+
+
+def ppo_actor_loss_fn(params, cfg, batch, rl: PPOConfig):
+    """Actor-only PPO loss for the ``actor_update`` stage: clipped policy
+    objective over per-token GAE advantages (+ optional KL / entropy).
+    The value term lives in the separate ``critic_update`` stage."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, {"tokens": tokens})
+    logp, ent = token_logprobs(logits[:, :-1], tokens[:, 1:],
+                               use_pallas=rl.use_pallas_logprob)
+    mask = batch["response_mask"][:, 1:]
+    pl_loss, stats = clipped_policy_loss(
+        logp, batch["old_logprob"][:, 1:], batch["advantage"][:, 1:], mask,
+        clip_eps=rl.clip_eps)
+    loss = pl_loss + aux
+    if rl.kl_coef and batch.get("ref_logprob") is not None:
+        loss = loss + rl.kl_coef * kl_penalty(
+            logp, batch["ref_logprob"][:, 1:], mask)
+    if rl.entropy_coef:
+        loss = loss - rl.entropy_coef * (ent * mask).sum() / \
+            jnp.maximum(mask.sum(), 1.0)
+    metrics = {"loss": loss, "policy_loss": pl_loss,
+               "entropy": (ent * mask).sum() / jnp.maximum(mask.sum(), 1.0),
+               **stats}
+    return loss, metrics
+
+
+def ppo_critic_loss_fn(critic_params, cfg, batch, rl: PPOConfig):
+    """Critic-only PPO loss for the ``critic_update`` stage."""
+    values = critic_forward(critic_params, cfg, batch["tokens"])[:, :-1]
+    mask = batch["response_mask"][:, 1:]
+    vf = value_loss(values, batch["returns"][:, 1:],
+                    batch["old_values"][:, 1:], mask,
+                    clip_eps=rl.value_clip_eps)
+    return vf, {"value_loss": vf}
+
+
+def gae_stage(batch, *, gamma: float = 1.0, lam: float = 0.95, **kw):
+    """Stage fn for the ``advantage`` task: per-token GAE advantages and
+    returns from streamed reward + critic values (terminal reward on the
+    last response token, as in the verifiable-reward setting)."""
+    advs, rets = [], []
+    for mask, reward, values in zip(batch["response_mask"], batch["reward"],
+                                    batch["values"]):
+        mask = np.asarray(mask)
+        v = np.asarray(values, np.float32)
+        adv = np.zeros(len(mask), np.float32)
+        ret = np.zeros(len(mask), np.float32)
+        idx = np.where(mask > 0)[0]
+        if len(idx):
+            traj_r = np.zeros(len(idx), np.float32)
+            traj_r[-1] = float(reward)
+            vv = np.concatenate([v[idx], [0.0]])
+            a, r = gae(traj_r, vv, gamma=gamma, lam=lam)
+            adv[idx] = a
+            ret[idx] = r
+        advs.append(adv)
+        rets.append(ret)
+    # returns before advantage: the actor update gates on "advantage", so
+    # by the time the step driver can consume a row (and end the run) the
+    # critic's "returns" column is already written — the critic_update
+    # drain after shutdown then sees every row
+    return {"updates": {"returns": rets, "advantage": advs}}
+
+
+def ppo_dataflow(*, kl_coef: float = 0.0, gamma: float = 1.0,
+                 lam: float = 0.95, **_) -> StageGraph:
+    """PPO as a streaming stage graph (see module docstring)."""
+    g = StageGraph(source_columns=("prompt",))
+    g.add(StageSpec("generate", inputs=("prompt",),
+                    outputs=("response", "logprob", "response_mask",
+                             "response_ids", "group", "answer", "version"),
+                    engine="rollout", verb="generate_sequences",
+                    kind="generate"))
+    if kl_coef > 0:
+        g.add(StageSpec("ref_inference", inputs=("response",),
+                        outputs=("ref_logprob",),
+                        engine="rollout", verb="compute_log_prob"))
+    g.add(StageSpec("values", inputs=("response",), outputs=("values",),
+                    engine="critic", verb="compute_values"))
+    g.add(StageSpec("reward", inputs=("response_ids", "answer", "group"),
+                    outputs=("reward",),
+                    engine="rollout", verb="compute_rewards",
+                    kw={"group_advantage": False}))
+    g.add(StageSpec("advantage",
+                    inputs=("response_mask", "reward", "values"),
+                    outputs=("advantage", "returns"),
+                    fn=gae_stage, kw={"gamma": gamma, "lam": lam}))
+    actor_in = ["response", "logprob", "response_mask", "reward",
+                "advantage", "version"]
+    if kl_coef > 0:
+        actor_in.append("ref_logprob")
+    g.add(StageSpec("actor_update", inputs=tuple(actor_in),
+                    engine="actor", verb="update_actor",
+                    kind="train", drives_steps=True))
+    g.add(StageSpec("critic_update",
+                    inputs=("response", "response_mask", "returns",
+                            "values", "version"),
+                    engine="critic", verb="update_critic",
+                    kind="train_stream"))
+    return g
+
+
+register_dataflow("ppo", ppo_dataflow)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "rl", "opt_cfg"))

@@ -1,0 +1,37 @@
+"""Optional-hypothesis shim: property tests run when ``hypothesis`` is
+installed (see requirements-dev.txt) and skip cleanly when it is not —
+the tier-1 suite must collect on a bare runtime image.
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    def given(*_a, **_k):
+        def deco(f):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+        return deco
+
+    def settings(*_a, **_k):
+        def deco(f):
+            return f
+        return deco
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies``: strategy constructors
+        are evaluated at decoration time, so they must exist but their
+        results are never used."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -2,7 +2,7 @@
 these are the planner's decision inputs, so monotonicity bugs would
 silently corrupt resource plans."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_config
 from repro.core.planner import (ClusterPlan, Workload, forward_flops,
