@@ -1,11 +1,20 @@
 """Fig. 11 reproduction: per-instance execution timeline + bubble
-fractions of the optimized async workflow vs the baseline."""
+fractions of the optimized async workflow vs the baseline.
+
+``python -m benchmarks.gantt --trace BENCH_ci_trace.json`` additionally
+writes one Perfetto-loadable Chrome trace per mode
+(``BENCH_ci_trace_baseline.json`` / ``..._async.json``) next to the
+``BENCH_*.json`` trajectory — load them at https://ui.perfetto.dev.
+"""
 from __future__ import annotations
+
+import argparse
+import pathlib
 
 import numpy as np
 
 
-def run(render: bool = False) -> list[dict]:
+def run(render: bool = False, trace: str = "") -> list[dict]:
     from repro.api import Trainer, TrainerConfig
 
     rows = []
@@ -24,6 +33,12 @@ def run(render: bool = False) -> list[dict]:
         rows.append(dict(name=f"gantt_{mode}_train_bubble",
                          us_per_call=r.wall_time_s * 1e6,
                          derived=round(bf.get("train-0", 0.0), 3)))
+        if trace:
+            p = pathlib.Path(trace)
+            out = p.with_name(f"{p.stem}_{mode}{p.suffix or '.json'}")
+            r.log.to_chrome_trace(path=str(out))
+            if render:
+                print(f"wrote chrome trace: {out}")
         if render:
             print(f"--- {mode} ---")
             print(r.log.render_gantt(100))
@@ -31,5 +46,10 @@ def run(render: bool = False) -> list[dict]:
 
 
 if __name__ == "__main__":
-    for row in run(render=True):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", nargs="?", const="gantt_trace.json",
+                    default="", metavar="PATH",
+                    help="write a Chrome trace per mode (PATH stem + mode)")
+    args = ap.parse_args()
+    for row in run(render=True, trace=args.trace):
         print(row)

@@ -12,6 +12,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.api import Trainer, TrainerConfig  # noqa: E402
+from repro.core.obs import render_report  # noqa: E402
 
 
 def main():
@@ -49,6 +50,8 @@ def main():
         print(f"  step {m['step']:3d}  reward {r:+.3f}  {bar}")
     print("\nexecution timeline (G=generate U=update w=weight-sync .=wait):")
     print(result.log.render_gantt(90))
+    print()
+    print(render_report(result.telemetry))
 
 
 if __name__ == "__main__":

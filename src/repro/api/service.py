@@ -16,6 +16,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
+from repro.core.obs import get_registry, render_report
 from repro.core.transfer_queue import TransferQueue
 from repro.core.workflow.stage_graph import (StageGraph, StageRunner,
                                              StageSpec, WorkflowConfig,
@@ -89,6 +90,18 @@ class AsyncFlowService:
         r = WeightReceiver(self.channel, init_params, version=0)
         self.receivers.append(r)
         return r
+
+    # -- telemetry (the monitoring surface an operator dashboard polls) ------
+
+    def metrics_snapshot(self) -> Dict[str, dict]:
+        """JSON-safe snapshot of the process-global metrics registry:
+        queue depths, per-stage latency/throughput, weight-sync stats."""
+        return get_registry().snapshot()
+
+    def telemetry_report(self, result) -> str:
+        """Render a finished run's per-stage telemetry table
+        (``WorkflowResult.telemetry``) as fixed-width text."""
+        return render_report(result.telemetry)
 
     # -- stage-graph workflow automation (§5.1) ------------------------------
 

@@ -57,6 +57,8 @@ class TrainerConfig:
     gae_lambda: float = 0.95           # PPO/GAE lambda
     checkpoint_dir: str = ""           # save final state when set
     channel_bandwidth_gbps: float = 0.0  # simulated host-net weight path
+    metrics_jsonl: str = ""            # periodic metrics snapshots (JSONL)
+    metrics_interval_s: float = 0.25   # sampler cadence when enabled
 
 
 class Trainer:
@@ -109,6 +111,10 @@ class Trainer:
         self.dataset = PromptDataset(seed=tcfg.seed)
 
     def fit(self):
+        """Run the workflow; the returned ``WorkflowResult`` carries the
+        full telemetry dict (per-stage table, busy/wait fractions,
+        staleness quantiles, raw metrics snapshot) — render it with
+        :func:`repro.core.obs.render_report`."""
         t = self.tcfg
         wcfg = WorkflowConfig(
             mode=t.mode, num_rollout_workers=t.rollout_workers,
@@ -118,7 +124,9 @@ class Trainer:
             num_steps=t.num_steps, staleness=t.staleness,
             staggered=t.staggered, policy=t.policy,
             num_storage_units=t.num_storage_units,
-            channel_bandwidth_gbps=t.channel_bandwidth_gbps)
+            channel_bandwidth_gbps=t.channel_bandwidth_gbps,
+            metrics_jsonl=t.metrics_jsonl,
+            metrics_interval_s=t.metrics_interval_s)
         graph = build_dataflow(t.algorithm, kl_coef=t.kl_coef,
                                gamma=t.gamma, lam=t.gae_lambda)
         runner = StageRunner(

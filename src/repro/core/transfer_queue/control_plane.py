@@ -18,6 +18,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
+from repro.core.obs import MetricsRegistry, get_registry
+
 
 @dataclass
 class BatchMeta:
@@ -43,7 +45,8 @@ class TransferQueueController:
     """
 
     def __init__(self, task: str, columns: Sequence[str], capacity: int,
-                 policy: str = "fifo"):
+                 policy: str = "fifo",
+                 metrics: Optional[MetricsRegistry] = None):
         self.task = task
         self.columns = list(columns)
         self.capacity = capacity
@@ -63,6 +66,30 @@ class TransferQueueController:
         # instrumentation
         self.n_requests = 0
         self.total_wait_s = 0.0
+        m = metrics if metrics is not None else get_registry()
+        self.metrics = m
+        # pre-bound series (labels sorted once) — cheap enough to update
+        # inside the scheduling lock
+        self._m_requests = m.counter(
+            "tq_requests_total", "scheduling requests per task").labels(
+            task=task)
+        self._m_rows_ready = m.counter(
+            "tq_rows_ready_total",
+            "rows that became schedulable per task").labels(task=task)
+        self._m_rows_consumed = m.counter(
+            "tq_rows_consumed_total", "rows handed to consumers per task"
+        ).labels(task=task)
+        self._m_depth = m.gauge(
+            "tq_ready_depth",
+            "rows currently ready and unconsumed (queue depth)").labels(
+            task=task)
+        self._m_sched = m.counter(
+            "tq_sched_decisions_total",
+            "micro-batches packed per task/policy").labels(
+            task=task, policy=policy)
+        self._m_wait = m.counter(
+            "tq_blocked_wait_seconds_total",
+            "seconds consumers spent blocked on this task")
 
     # -- metadata notification (called by storage units) ---------------------
 
@@ -73,6 +100,8 @@ class TransferQueueController:
             if self._n_ready_cols[idx] == len(self.columns) \
                     and not self._consumed[idx]:
                 self._avail[idx] = None
+                self._m_rows_ready.inc()
+                self._m_depth.set(len(self._avail))
 
     def notify(self, idx: int, column: str) -> None:
         pos = self._col_pos.get(column)
@@ -113,24 +142,27 @@ class TransferQueueController:
         deadline = None if timeout is None else t0 + timeout
         with self._cv:
             self.n_requests += 1
+            self._m_requests.inc()
             while True:
                 n_avail = len(self._avail)
                 if n_avail >= batch_size or \
                         (n_avail and (self._closed or allow_partial)):
                     break
                 if self._closed and not n_avail:
+                    self._account_wait(time.monotonic() - t0, consumer)
                     return None
                 remaining = None if deadline is None \
                     else max(0.0, deadline - time.monotonic())
                 if remaining == 0.0:
                     if n_avail and allow_partial:
                         break
+                    self._account_wait(time.monotonic() - t0, consumer)
                     return None
                 self._cv.wait(timeout=remaining if remaining is not None
                               else 0.1)
             # §3.5 instrumentation: only the blocked interval counts as
             # wait — scheduling/packing below is controller work time
-            self.total_wait_s += time.monotonic() - t0
+            self._account_wait(time.monotonic() - t0, consumer)
             if self.policy == "fifo":
                 chosen = list(itertools.islice(self._avail, batch_size))
             else:
@@ -139,7 +171,15 @@ class TransferQueueController:
             for i in chosen:
                 self._consumed[i] = True
                 self._avail.pop(i, None)
+            self._m_sched.inc()
+            self._m_rows_consumed.inc(len(chosen))
+            self._m_depth.set(len(self._avail))
             return BatchMeta(chosen, list(self.columns), consumer)
+
+    def _account_wait(self, blocked_s: float, consumer: str) -> None:
+        self.total_wait_s += blocked_s
+        if blocked_s > 0:
+            self._m_wait.inc(blocked_s, task=self.task, consumer=consumer)
 
     def _schedule(self, avail: List[int], n: int, consumer: str) -> List[int]:
         n = min(n, len(avail))

@@ -20,13 +20,17 @@ from repro.core.transfer_queue.data_plane import DataPlane
 
 class TransferQueue:
     def __init__(self, capacity: int, tasks: Dict[str, Sequence[str]],
-                 num_storage_units: int = 2, policy: str = "fifo"):
-        """tasks: {task_name: required columns}."""
+                 num_storage_units: int = 2, policy: str = "fifo",
+                 metrics=None):
+        """tasks: {task_name: required columns}. ``metrics`` is an
+        optional :class:`repro.core.obs.MetricsRegistry` shared by every
+        controller (defaults to the process-global registry)."""
         self.capacity = capacity
         self.data_plane = DataPlane(num_storage_units)
         self.controllers: Dict[str, TransferQueueController] = {}
         for task, cols in tasks.items():
-            c = TransferQueueController(task, cols, capacity, policy=policy)
+            c = TransferQueueController(task, cols, capacity, policy=policy,
+                                        metrics=metrics)
             self.controllers[task] = c
             self.data_plane.register_controller(c)
         self._idx_counter = itertools.count()

@@ -42,6 +42,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.obs import (MetricsRegistry, MetricsSampler, build_telemetry,
+                            get_registry)
 from repro.core.transfer_queue import TransferQueue
 from repro.core.workflow.events import EventLog
 from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
@@ -64,6 +66,8 @@ class WorkflowConfig:
     policy: str = "fifo"
     channel_bandwidth_gbps: float = 0.0
     extra_columns: tuple = ()      # e.g. ("ref_logprob",) for GRPO+KL
+    metrics_jsonl: str = ""        # JSONL metrics-snapshot path ("" = off)
+    metrics_interval_s: float = 0.25
 
     @property
     def samples_per_step(self) -> int:
@@ -80,6 +84,9 @@ class WorkflowResult:
     log: EventLog
     bubble_fraction: Dict[str, float] = field(default_factory=dict)
     aux_metrics: Dict[str, List[dict]] = field(default_factory=dict)
+    # per-stage table + instance busy/wait + staleness quantiles + raw
+    # MetricsRegistry snapshot (see repro.core.obs.report)
+    telemetry: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass
@@ -227,13 +234,18 @@ class StageRunner:
     def __init__(self, cfg: WorkflowConfig, graph: StageGraph, *,
                  engines: Dict[str, Any],
                  prompt_stream: Callable[[int], List[Any]],
-                 log: Optional[EventLog] = None):
+                 log: Optional[EventLog] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         graph.validate()
         self.cfg = cfg
         self.graph = graph
         self.engines = dict(engines)
         self.prompt_stream = prompt_stream
         self.log = log or EventLog()
+        self.registry = metrics if metrics is not None else get_registry()
+        # declare stage kinds in topo order so gantt symbols for custom
+        # stages are deterministic across runs
+        self.log.register_kinds([s.name for s in graph.topo_order()])
 
         gens = [s for s in graph.stages.values() if s.kind == "generate"]
         drivers = [s for s in graph.stages.values() if s.drives_steps]
@@ -263,7 +275,8 @@ class StageRunner:
                     + total_rows)
         self.tq = TransferQueue(
             capacity=capacity, tasks=graph.tasks(),
-            num_storage_units=cfg.num_storage_units, policy=cfg.policy)
+            num_storage_units=cfg.num_storage_units, policy=cfg.policy,
+            metrics=self.registry)
 
         self.n_gen_workers = (self.gen_stage.num_workers
                               or cfg.num_rollout_workers)
@@ -275,11 +288,14 @@ class StageRunner:
                 f"drives_steps stage {self.driver_stage.name!r} must name "
                 f"an engine exposing .params — the step driver publishes "
                 f"weights to the generate stage at every step boundary")
-        self.channel = WeightChannel(cfg.channel_bandwidth_gbps)
+        self.channel = WeightChannel(cfg.channel_bandwidth_gbps,
+                                     metrics=self.registry)
         self.sender = WeightSender(
-            self.channel, mode="async" if cfg.mode == "async" else "sync")
+            self.channel, mode="async" if cfg.mode == "async" else "sync",
+            metrics=self.registry)
         self.receivers = [
-            WeightReceiver(self.channel, init_weights, version=0)
+            WeightReceiver(self.channel, init_weights, version=0,
+                           metrics=self.registry)
             for _ in range(self.n_gen_workers)]
         self.stagger = StaggeredUpdateGroup(self.receivers) \
             if cfg.staggered else None
@@ -293,6 +309,22 @@ class StageRunner:
         self.aux_metrics: Dict[str, List[dict]] = {}
         self.samples_trained = 0
         self._error: Optional[str] = None
+
+        # per-stage worker instrumentation (shared families, stage labels)
+        m = self.registry
+        self._h_batch = m.histogram(
+            "stage_batch_seconds", "per-stage batch latency")
+        self._c_samples = m.counter(
+            "stage_samples_total", "samples produced/consumed per stage")
+        self._c_tokens = m.counter(
+            "stage_tokens_total", "tokens generated per stage")
+        self._c_stalls = m.counter(
+            "stage_stalls_total",
+            "empty fetches: the stage polled with no rows ready "
+            "(upstream backpressure)")
+        self._h_staleness = m.histogram(
+            "train_staleness",
+            "observed weight-version staleness at the train consumer")
 
     def _fail(self, msg: str) -> None:
         """Record a fatal stage error and stop the run; run() re-raises."""
@@ -327,12 +359,17 @@ class StageRunner:
         fn = self._stage_fn(spec)
         bs = spec.batch_size or self.cfg.rollout_batch
         out_cols = [c for c in spec.outputs if c != "version"]
+        h_batch = self._h_batch.labels(stage=spec.name)
+        c_samples = self._c_samples.labels(stage=spec.name)
+        c_tokens = self._c_tokens.labels(stage=spec.name)
+        c_stalls = self._c_stalls.labels(stage=spec.name)
         while not self._stop.is_set():
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
                                 allow_partial=True)
             if batch is None:
                 if self.tq.controllers[spec.name]._closed:
                     return
+                c_stalls.inc()
                 continue
             batch.pop("indices", None)
 
@@ -360,10 +397,12 @@ class StageRunner:
                                            timeout=30.0)
 
             n_in = len(batch[self._source_col])
+            t_gen = time.monotonic()
             with self.log.span(name, "generate", version=recv.version,
                                n=n_in):
                 out = fn(batch, params=recv.params, rng=rng,
                          version=recv.version, **spec.kw) or {}
+            h_batch.observe(time.monotonic() - t_gen)
 
             conts = out.get("requeue") or []
             if conts:
@@ -386,6 +425,8 @@ class StageRunner:
                     f"fan-out exceeds cfg.group_size accounting")
                 return
             token_lens = [r.get("token_len", 0) for r in rows]
+            c_samples.inc(len(rows))
+            c_tokens.inc(sum(token_lens))
             for j, col in enumerate(out_cols):
                 self.tq.put_batch(idxs, col, [r.get(col) for r in rows],
                                   token_lens=token_lens if j == 0 else None)
@@ -401,6 +442,9 @@ class StageRunner:
         name = f"{spec.name}-{widx}"
         fn = self._stage_fn(spec)
         bs = spec.batch_size or self.cfg.train_micro_batch
+        h_batch = self._h_batch.labels(stage=spec.name)
+        c_samples = self._c_samples.labels(stage=spec.name)
+        c_stalls = self._c_stalls.labels(stage=spec.name)
         while True:
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
                                 allow_partial=True)
@@ -408,10 +452,14 @@ class StageRunner:
                 if self._stop.is_set() or \
                         self.tq.controllers[spec.name]._closed:
                     return
+                c_stalls.inc()
                 continue
             idxs = batch.pop("indices")
+            t_fn = time.monotonic()
             with self.log.span(name, spec.name, n=len(idxs)):
                 out = fn(batch, indices=idxs, **spec.kw) or {}
+            h_batch.observe(time.monotonic() - t_fn)
+            c_samples.inc(len(idxs))
             for col, vals in (out.get("updates") or {}).items():
                 self.tq.put_batch(idxs, col, vals)
             for i, col, v in (out.get("writes") or []):
@@ -428,6 +476,9 @@ class StageRunner:
         name = "train-0"
         cfg = self.cfg
         fn = self._stage_fn(spec)
+        h_batch = self._h_batch.labels(stage=spec.name)
+        c_samples = self._c_samples.labels(stage=spec.name)
+        h_staleness = self._h_staleness.labels(stage=spec.name)
         for step in range(cfg.num_steps):
             got = 0
             while got < cfg.samples_per_step and not self._stop.is_set():
@@ -447,9 +498,14 @@ class StageRunner:
                 n = len(versions) if versions is not None \
                     else len(batch[spec.inputs[0]])
                 for v in (versions or []):
-                    self.staleness_seen.append(self.trainer_version - v)
+                    s = self.trainer_version - v
+                    self.staleness_seen.append(s)
+                    h_staleness.observe(s)
+                t_up = time.monotonic()
                 with self.log.span(name, "update", step=step, n=n):
                     m = fn(batch)
+                h_batch.observe(time.monotonic() - t_up)
+                c_samples.inc(n)
                 if m:
                     self.metrics.append({"step": step, **m})
                 got += n
@@ -471,6 +527,9 @@ class StageRunner:
         fn = self._stage_fn(spec)
         bs = spec.batch_size or self.cfg.train_micro_batch
         sink = self.aux_metrics.setdefault(spec.name, [])
+        h_batch = self._h_batch.labels(stage=spec.name)
+        c_samples = self._c_samples.labels(stage=spec.name)
+        c_stalls = self._c_stalls.labels(stage=spec.name)
         while True:
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
                                 allow_partial=True)
@@ -478,11 +537,15 @@ class StageRunner:
                 if self._stop.is_set() or \
                         self.tq.controllers[spec.name]._closed:
                     return
+                c_stalls.inc()
                 continue
             batch.pop("indices", None)
             n = len(batch[spec.inputs[0]])
+            t_fn = time.monotonic()
             with self.log.span(name, spec.name, n=n):
                 m = fn(batch)
+            h_batch.observe(time.monotonic() - t_fn)
+            c_samples.inc(n)
             if m:
                 sink.append(m)
 
@@ -521,6 +584,10 @@ class StageRunner:
                        f"failed: {e!r}")
 
     def run(self) -> WorkflowResult:
+        sampler = None
+        if self.cfg.metrics_jsonl:
+            sampler = MetricsSampler(self.registry, self.cfg.metrics_jsonl,
+                                     self.cfg.metrics_interval_s).start()
         t0 = time.monotonic()
         feeder = threading.Thread(target=self._guard,
                                   args=(self._feed_prompts,), daemon=True)
@@ -539,16 +606,20 @@ class StageRunner:
                 daemon=True))
         trainer = threading.Thread(target=self._guard, args=(self._driver,),
                                    daemon=True)
-        feeder.start()
-        for w in workers:
-            w.start()
-        trainer.start()
-        trainer.join()
-        self._stop.set()
-        self.tq.close()
-        for w in workers:
-            w.join(timeout=5.0)
-        feeder.join(timeout=5.0)
+        try:
+            feeder.start()
+            for w in workers:
+                w.start()
+            trainer.start()
+            trainer.join()
+            self._stop.set()
+            self.tq.close()
+            for w in workers:
+                w.join(timeout=5.0)
+            feeder.join(timeout=5.0)
+        finally:
+            if sampler is not None:
+                sampler.stop()
         if self._error is not None:
             raise RuntimeError(f"stage-graph run failed: {self._error}")
         wall = time.monotonic() - t0
@@ -557,4 +628,6 @@ class StageRunner:
             wall_time_s=wall, samples_trained=n, throughput=n / wall,
             metrics=self.metrics, staleness_seen=self.staleness_seen,
             log=self.log, bubble_fraction=self.log.bubble_fraction(),
-            aux_metrics=self.aux_metrics)
+            aux_metrics=self.aux_metrics,
+            telemetry=build_telemetry(self.log, self.registry, wall, n,
+                                      self.staleness_seen))

@@ -26,6 +26,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.obs import get_registry
+
 
 @dataclass
 class VersionedWeights:
@@ -40,16 +42,22 @@ class WeightChannel:
     size — used by the simulator-calibrated benchmarks.
     """
 
-    def __init__(self, bandwidth_gbps: float = 0.0):
+    def __init__(self, bandwidth_gbps: float = 0.0, metrics=None):
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._latest: Optional[VersionedWeights] = None
         self.bandwidth_gbps = bandwidth_gbps
         self.bytes_sent = 0
+        m = metrics if metrics is not None else get_registry()
+        self._m_bytes = m.counter(
+            "weight_bytes_published_total",
+            "host-buffer bytes offered to the weight channel")
 
     def offer(self, vw: VersionedWeights) -> None:
+        nbytes = sum(getattr(a, "nbytes", 0)
+                     for a in jax.tree.leaves(vw.host_params))
+        self._m_bytes.inc(nbytes)
         if self.bandwidth_gbps > 0:
-            nbytes = sum(a.nbytes for a in jax.tree.leaves(vw.host_params))
             time.sleep(nbytes / (self.bandwidth_gbps * 1e9 / 8))
             self.bytes_sent += nbytes
         with self._cv:
@@ -78,16 +86,23 @@ class WeightSender:
     device→host offload + channel send happen on a background thread,
     overlapping with the next training step (§4.2.3)."""
 
-    def __init__(self, channel: WeightChannel, mode: str = "async"):
+    def __init__(self, channel: WeightChannel, mode: str = "async",
+                 metrics=None):
         assert mode in ("sync", "async")
         self.channel = channel
         self.mode = mode
         self._pending: Optional[threading.Thread] = None
+        m = metrics if metrics is not None else get_registry()
+        self._h_sync = m.histogram(
+            "weight_sync_seconds",
+            "weight publish (D2H + channel) / swap (H2D) durations")
 
     def publish(self, params, version: int) -> None:
         def _send():
+            t0 = time.monotonic()
             host = jax.tree.map(lambda a: np.asarray(a), params)
             self.channel.offer(VersionedWeights(version, host))
+            self._h_sync.observe(time.monotonic() - t0, role="publish")
 
         if self.mode == "sync":
             _send()
@@ -109,23 +124,39 @@ class WeightReceiver:
     boundaries and pays only H2D (delayed parameter update, §4.2.2)."""
 
     def __init__(self, channel: WeightChannel, init_params, version: int = 0,
-                 to_device: Optional[Callable] = None):
+                 to_device: Optional[Callable] = None, metrics=None):
         self.channel = channel
         self.params = init_params
         self.version = version
         self._to_device = to_device or (lambda tree: jax.tree.map(
             jax.numpy.asarray, tree))
+        m = metrics if metrics is not None else get_registry()
+        self._h_sync = m.histogram(
+            "weight_sync_seconds",
+            "weight publish (D2H + channel) / swap (H2D) durations")
+        self._m_skipped = m.counter(
+            "weight_versions_skipped_total",
+            "published versions never loaded by a receiver (delayed "
+            "parameter update jumping straight to the newest)")
 
     def staged_version(self) -> int:
         vw = self.channel.peek()
         return vw.version if vw else self.version
 
+    def _swap(self, vw: VersionedWeights) -> None:
+        t0 = time.monotonic()
+        self.params = self._to_device(vw.host_params)
+        skipped = vw.version - self.version - 1
+        if skipped > 0:
+            self._m_skipped.inc(skipped)
+        self.version = vw.version
+        self._h_sync.observe(time.monotonic() - t0, role="swap")
+
     def maybe_swap(self) -> bool:
         """Swap in the newest staged weights if any. Returns True if swapped."""
         vw = self.channel.peek()
         if vw is not None and vw.version > self.version:
-            self.params = self._to_device(vw.host_params)
-            self.version = vw.version
+            self._swap(vw)
             return True
         return False
 
@@ -134,8 +165,7 @@ class WeightReceiver:
         vw = self.channel.wait_for(version, timeout)
         if vw is None:
             return False
-        self.params = self._to_device(vw.host_params)
-        self.version = vw.version
+        self._swap(vw)
         return True
 
 

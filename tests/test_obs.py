@@ -1,0 +1,343 @@
+"""Unified telemetry layer: registry thread-safety, histogram quantiles,
+Chrome-trace export, EventLog bubble accounting fixes, gantt symbol
+stability, the JSONL sampler, the benchmark trajectory recorder, and a
+staged GRPO smoke run populating queue/staleness metrics."""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.obs import (MetricsRegistry, build_telemetry, get_registry,
+                            render_report, scoped)
+from repro.core.workflow import StageGraph, StageRunner, StageSpec, \
+    WorkflowConfig
+from repro.core.workflow.events import EventLog
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------- #
+# registry                                                                #
+# ---------------------------------------------------------------------- #
+
+def test_counter_thread_safety_under_concurrent_increments():
+    reg = MetricsRegistry()
+    c = reg.counter("hits", "test")
+    bound = c.labels(stage="s")
+    n_threads, per_thread = 8, 5000
+
+    def worker():
+        for _ in range(per_thread):
+            bound.inc()
+            c.inc(1, other="t")
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value(stage="s") == n_threads * per_thread
+    assert c.value(other="t") == n_threads * per_thread
+    assert c.total() == 2 * n_threads * per_thread
+
+
+def test_histogram_concurrent_observe_exact_count_and_sum():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "test")
+
+    def worker(k):
+        b = h.labels(stage="s")
+        for i in range(1000):
+            b.observe(1.0)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    s = h.summary(stage="s")
+    assert s["count"] == 4000
+    assert s["sum"] == pytest.approx(4000.0)
+
+
+def test_histogram_quantiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("q", "test")
+    for v in range(1, 101):           # 1..100
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 100
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    assert s["mean"] == pytest.approx(50.5)
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p95"] == pytest.approx(95.05)
+    assert s["p99"] == pytest.approx(99.01)
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    a = reg.counter("x", "help")
+    assert reg.counter("x") is a
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("x")
+    snap = reg.snapshot()
+    assert snap["x"]["type"] == "counter" and snap["x"]["help"] == "help"
+
+
+def test_scoped_registry_isolates_the_global_default():
+    outer = get_registry()
+    with scoped() as reg:
+        assert get_registry() is reg
+        get_registry().counter("scoped_only").inc()
+        assert reg.counter("scoped_only").total() == 1
+    assert get_registry() is outer
+    assert outer.get("scoped_only") is None
+
+
+def test_gauge_set_inc_dec():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    g.set(5, task="t")
+    g.inc(2, task="t")
+    g.dec(3, task="t")
+    assert g.value(task="t") == 4
+    g.labels(task="t").set(42)
+    assert g.value(task="t") == 42
+
+
+# ---------------------------------------------------------------------- #
+# EventLog: chrome trace + overlap-merged bubble accounting + symbols     #
+# ---------------------------------------------------------------------- #
+
+def _log_with(events):
+    log = EventLog()
+    for inst, kind, s, e in events:
+        log.record(inst, kind, log.t0 + s, log.t0 + e, n=1)
+    return log
+
+
+def test_chrome_trace_valid_json_monotonic_ts_dur():
+    log = _log_with([("rollout-0", "generate", 0.0, 1.0),
+                     ("rollout-0", "weight_sync", 1.0, 1.2),
+                     ("train-0", "wait", 0.0, 0.9),
+                     ("train-0", "update", 0.9, 1.4)])
+    doc = json.loads(json.dumps(log.to_chrome_trace()))
+    assert isinstance(doc["traceEvents"], list)
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(xs) == 4
+    assert all(e["dur"] >= 0 for e in xs)
+    assert all(a["ts"] <= b["ts"] for a, b in zip(xs, xs[1:]))
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "M"}
+    assert "thread_name" in names
+    # idle kinds are categorised separately so Perfetto can filter them
+    assert {e["cat"] for e in xs} == {"stage", "idle"}
+
+
+def test_chrome_trace_writes_file(tmp_path):
+    log = _log_with([("a", "generate", 0.0, 0.5)])
+    path = tmp_path / "trace.json"
+    log.to_chrome_trace(path=str(path))
+    doc = json.loads(path.read_text())
+    assert doc["traceEvents"]
+
+
+def test_busy_fraction_merges_overlapping_spans():
+    # two workers recorded under ONE instance with overlapping spans:
+    # [0,2] and [1,3] over a wall span of 3s — naive summing yields 4/3
+    # busy (negative bubble); the union is exactly the wall span
+    log = _log_with([("inst", "generate", 0.0, 2.0),
+                     ("inst", "generate", 1.0, 3.0)])
+    assert log.busy_fraction("inst") == pytest.approx(1.0)
+    assert log.bubble_fraction()["inst"] == pytest.approx(0.0)
+
+
+def test_busy_fraction_gap_still_counts_bubble():
+    log = _log_with([("inst", "generate", 0.0, 1.0),
+                     ("inst", "generate", 3.0, 4.0)])
+    assert log.busy_fraction("inst") == pytest.approx(0.5)
+    assert log.wait_fraction("inst") == pytest.approx(0.0)
+
+
+def test_wait_fraction_counts_idle_kinds():
+    log = _log_with([("inst", "generate", 0.0, 1.0),
+                     ("inst", "wait", 1.0, 2.0)])
+    assert log.busy_fraction("inst") == pytest.approx(0.5)
+    assert log.wait_fraction("inst") == pytest.approx(0.5)
+
+
+def test_render_gantt_stable_distinct_symbols_for_custom_stages():
+    log = EventLog()
+    log.register_kinds(["filter_stage", "score_stage"])
+    log.record("w-0", "filter_stage", log.t0 + 0.0, log.t0 + 1.0)
+    log.record("w-1", "score_stage", log.t0 + 1.0, log.t0 + 2.0)
+    log.record("w-2", "generate", log.t0 + 0.0, log.t0 + 2.0)
+    out = log.render_gantt(20)
+    sym = log._symbols(log.events())
+    assert sym["filter_stage"] != sym["score_stage"]
+    assert "#" not in (sym["filter_stage"], sym["score_stage"])
+    assert sym["generate"] == "G"
+    # deterministic: registration order pins the assignment
+    log2 = EventLog()
+    log2.register_kinds(["filter_stage", "score_stage"])
+    assert log2._symbols([]) == {**log2._symbols([]),
+                                 "filter_stage": sym["filter_stage"],
+                                 "score_stage": sym["score_stage"]}
+    assert sym["filter_stage"] in out and sym["score_stage"] in out
+
+
+# ---------------------------------------------------------------------- #
+# sampler + stage-runner integration (no JAX: toy graph)                  #
+# ---------------------------------------------------------------------- #
+
+def _toy_graph():
+    def gen(batch, *, params, rng, version=0, **kw):
+        time.sleep(0.002)
+        return {"rows": [dict(item=x, token_len=3)
+                         for x in batch["prompt"] for _ in range(2)]}
+
+    def train(batch, **kw):
+        return {"n": len(batch["version"])}
+
+    g = StageGraph(source_columns=("prompt",))
+    g.add(StageSpec("generate", inputs=("prompt",),
+                    outputs=("item", "version"), fn=gen, kind="generate"))
+    g.add(StageSpec("actor_update", inputs=("item", "version"),
+                    engine="trainer", fn=train, kind="train",
+                    drives_steps=True))
+    return g
+
+
+def test_stage_runner_emits_jsonl_snapshots(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    with scoped() as reg:
+        cfg = WorkflowConfig(mode="streaming", num_rollout_workers=1,
+                             rollout_batch=2, train_micro_batch=4,
+                             prompts_per_step=4, group_size=2, num_steps=2,
+                             metrics_jsonl=str(path),
+                             metrics_interval_s=0.02)
+        r = StageRunner(cfg, _toy_graph(),
+                        engines={"trainer": SimpleNamespace(params={"w": 0})},
+                        prompt_stream=lambda s: [1, 2, 3, 4]).run()
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert lines, "sampler must emit at least a final snapshot"
+    last = lines[-1]["metrics"]
+    assert "tq_rows_consumed_total" in last
+    assert "stage_batch_seconds" in last
+    # telemetry table rides on the result
+    assert r.telemetry["samples_trained"] == r.samples_trained
+    assert any(row["stage"] == "generate" for row in r.telemetry["stages"])
+    assert "generate" in render_report(r.telemetry)
+
+
+def test_build_telemetry_shapes():
+    log = _log_with([("rollout-0", "generate", 0.0, 1.0),
+                     ("train-0", "update", 1.0, 2.0)])
+    reg = MetricsRegistry()
+    t = build_telemetry(log, reg, wall_time_s=2.0, samples_trained=8,
+                        staleness_seen=[0, 1, 1, 2])
+    assert t["throughput"] == pytest.approx(4.0)
+    assert t["staleness"]["p50"] == pytest.approx(1.0)
+    assert t["staleness"]["max"] == 2
+    assert t["instances"]["rollout-0"]["busy_frac"] > 0
+    assert isinstance(t["metrics"], dict)
+
+
+# ---------------------------------------------------------------------- #
+# staged GRPO smoke run populates the hot-layer metrics                   #
+# ---------------------------------------------------------------------- #
+
+def test_staged_grpo_populates_queue_and_staleness_metrics():
+    from repro.api import Trainer, TrainerConfig
+    with scoped() as reg:
+        tcfg = TrainerConfig(mode="async", num_steps=2, prompts_per_step=2,
+                             group_size=2, rollout_workers=2,
+                             rollout_batch=1, train_micro_batch=2,
+                             max_new_tokens=4, seq_len=24, kl_coef=0.05)
+        r = Trainer(tcfg).fit()
+        snap = reg.snapshot()
+    # queue depth + consumption per task controller
+    depth_tasks = {v["labels"]["task"]
+                   for v in snap["tq_ready_depth"]["values"]}
+    assert {"generate", "actor_update"} <= depth_tasks
+    consumed = {v["labels"]["task"]: v["value"]
+                for v in snap["tq_rows_consumed_total"]["values"]}
+    assert consumed["actor_update"] == r.samples_trained
+    # blocked-wait accounting per consumer exists
+    assert snap["tq_blocked_wait_seconds_total"]["values"]
+    # per-stage latency histograms with quantile summaries
+    stages = {v["labels"]["stage"]: v
+              for v in snap["stage_batch_seconds"]["values"]}
+    assert "generate" in stages and "actor_update" in stages
+    assert stages["generate"]["count"] > 0
+    assert stages["generate"]["p95"] >= stages["generate"]["p50"] >= 0
+    # staleness distribution observed at the train consumer
+    stale = snap["train_staleness"]["values"][0]
+    assert stale["count"] == len(r.staleness_seen) > 0
+    assert stale["max"] <= tcfg.staleness + 1
+    # tokens/samples throughput counters
+    tokens = {v["labels"]["stage"]: v["value"]
+              for v in snap["stage_tokens_total"]["values"]}
+    assert tokens.get("generate", 0) > 0
+    # weight path: bytes published + sync durations
+    assert snap["weight_bytes_published_total"]["values"][0]["value"] > 0
+    assert snap["weight_sync_seconds"]["values"]
+    # the per-stage report renders and names the streamed stages
+    rep = render_report(r.telemetry)
+    assert "generate" in rep and "ref_inference" in rep
+    assert r.telemetry["staleness"]["count"] == len(r.staleness_seen)
+
+
+# ---------------------------------------------------------------------- #
+# benchmark trajectory recorder                                           #
+# ---------------------------------------------------------------------- #
+
+def test_bench_run_json_trajectory(tmp_path):
+    out = tmp_path / "BENCH_test.json"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--json", str(out),
+         "roofline"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    lines = proc.stdout.strip().splitlines()
+    assert lines[0] == "name,us_per_call,derived"
+    for ln in lines[1:]:               # strictly CSV: 3 fields, numeric time
+        name, us, derived = ln.split(",", 2)
+        float(us)
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == "asyncflow-bench-trajectory/v1"
+    assert doc["git_rev"]
+    assert "roofline" in doc["suites"]
+    assert doc["suites"]["roofline"]["error"] is None
+    assert isinstance(doc["suites"]["roofline"]["rows"], list)
+
+
+def test_bench_run_error_rows_keep_stdout_csv(monkeypatch, capsys, tmp_path):
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        import benchmarks.roofline as roofline
+        import benchmarks.run as bench_run
+
+        def boom():
+            raise RuntimeError("suite exploded")
+
+        monkeypatch.setattr(roofline, "run", boom)
+        out = tmp_path / "BENCH_err.json"
+        with pytest.raises(SystemExit) as exc:
+            bench_run.main(["--json", str(out), "roofline"])
+        assert exc.value.code == 1
+        captured = capsys.readouterr()
+        # stdout is strictly CSV — the ERROR row and traceback go to stderr
+        assert captured.out.strip() == "name,us_per_call,derived"
+        assert "roofline,ERROR,0" in captured.err
+        assert "suite exploded" in captured.err
+        # the trajectory file still records the failure, flushed before exit
+        doc = json.loads(out.read_text())
+        assert "suite exploded" in doc["suites"]["roofline"]["error"]
+    finally:
+        sys.path.remove(REPO_ROOT)
