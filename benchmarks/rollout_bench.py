@@ -1,0 +1,152 @@
+"""Fixed-batch vs continuous-batching rollout on a length-skewed mix.
+
+The workload that motivates the `engines/continuous_batching` subsystem
+(Laminar / ROLL-Flash's long-tail argument): most requests want a few
+tokens, a minority want many. The fixed-batch engine decodes every batch
+in lockstep to the longest budget — short requests pay for the tail.
+The continuous batcher retires a finished sequence immediately, admits
+the next waiting prompt into the freed slot, and prefills prompts in one
+forward instead of scanning them token by token.
+
+Reported rows: wall-clock tokens/s per engine (useful tokens only —
+capped at each request's budget and truncated at EOS for both engines),
+the CB/fixed speedup, and the CB scheduler's slot occupancy / admission
+counters from the metrics registry.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _budgets(n: int, short_new: int, long_new: int) -> list:
+    """75% short / 25% long-tail per-request token budgets."""
+    return [long_new if i % 4 == 0 else short_new for i in range(n)]
+
+
+def _workload(smoke: bool) -> dict:
+    if smoke:
+        return dict(requests=8, batch=4, short_new=2, long_new=16)
+    return dict(requests=16, batch=4, short_new=4, long_new=48)
+
+
+def run(render: bool = False, smoke: bool = False) -> list:
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.obs import MetricsRegistry
+    from repro.data import PromptDataset
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.engines.continuous_batching import ContinuousBatchingEngine
+    from repro.models import init_params
+    from repro.rl.sampling import generate as fixed_generate
+
+    w = _workload(smoke)
+    # big enough per-step compute that scheduling (not dispatch overhead)
+    # decides throughput — the regime the subsystem targets
+    cfg = dataclasses.replace(
+        get_config("qwen2_5_7b").reduced(), num_layers=4, d_model=256,
+        d_ff=1024, num_heads=4, num_kv_heads=4, head_dim=64,
+        vocab_size=ByteTokenizer.vocab_size)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = PromptDataset(seed=0).prompts_for_step(0, w["requests"])
+    budgets = _budgets(w["requests"], w["short_new"], w["long_new"])
+    eos = ByteTokenizer.eos_id
+
+    # ---- fixed-batch arm: lockstep decode to the longest budget ----
+    def fixed_pass():
+        toks = 0
+        for i in range(0, len(prompts), w["batch"]):
+            chunk = prompts[i:i + w["batch"]]
+            bud = budgets[i:i + w["batch"]]
+            rows = fixed_generate(params, cfg,
+                                  [p["tokens"] for p in chunk], i,
+                                  max_new_tokens=w["long_new"],
+                                  temperature=1.0)
+            toks += sum(min(len(r["response_ids"]), b)
+                        for r, b in zip(rows, bud))
+        return toks
+
+    # ---- continuous arm: slot scheduler + paged KV, per-request budget ----
+    max_len = max(len(p["tokens"]) for p in prompts) + w["long_new"]
+
+    def cb_pass(metrics):
+        eng = ContinuousBatchingEngine(
+            cfg, num_slots=w["batch"], page_size=8, max_len=max_len,
+            max_new_tokens=w["long_new"], temperature=1.0, seed=0,
+            metrics=metrics)
+        seqs = [eng.make_sequence(p["tokens"], max_new=b)
+                for p, b in zip(prompts, budgets)]
+        done, _ = eng.generate(params, seqs)
+        return sum(q.gen_len for q in done), eng
+
+    fixed_pass()                            # warm both XLA caches
+    cb_pass(MetricsRegistry())
+    t0 = time.perf_counter()
+    fixed_tokens = fixed_pass()
+    fixed_wall = time.perf_counter() - t0
+
+    reg = MetricsRegistry()
+    t0 = time.perf_counter()
+    cb_tokens, eng = cb_pass(reg)
+    cb_wall = time.perf_counter() - t0
+
+    fixed_tps = fixed_tokens / fixed_wall
+    cb_tps = cb_tokens / cb_wall
+    snap = reg.snapshot()
+    admissions = sum(v["value"] for v in
+                     snap["rollout_admissions_total"]["values"])
+    prefill_s = sum(v["sum"] for v in
+                    snap["rollout_prefill_seconds"]["values"])
+    decode_s = sum(v["sum"] for v in
+                   snap["rollout_decode_step_seconds"]["values"])
+    if render:
+        print(f"fixed:      {fixed_tokens} tok in {fixed_wall:.2f}s "
+              f"({fixed_tps:.1f} tok/s)")
+        print(f"continuous: {cb_tokens} tok in {cb_wall:.2f}s "
+              f"({cb_tps:.1f} tok/s) — {admissions:.0f} admissions, "
+              f"prefill {prefill_s:.2f}s / decode {decode_s:.2f}s")
+    return [
+        dict(name="rollout_fixed_tokens_per_s",
+             us_per_call=fixed_wall * 1e6, derived=round(fixed_tps, 1)),
+        dict(name="rollout_cb_tokens_per_s",
+             us_per_call=cb_wall * 1e6, derived=round(cb_tps, 1)),
+        dict(name="rollout_cb_speedup",
+             us_per_call=cb_wall * 1e6,
+             derived=round(cb_tps / fixed_tps, 3)),
+        dict(name="rollout_cb_admissions",
+             us_per_call=cb_wall * 1e6, derived=int(admissions)),
+        dict(name="rollout_cb_prefill_frac",
+             us_per_call=prefill_s * 1e6,
+             derived=round(prefill_s / max(prefill_s + decode_s, 1e-9),
+                           3)),
+    ]
+
+
+def main(argv=None) -> int:
+    """Standalone entry (CI smoke mode): CSV on stdout, optional JSON."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for CI")
+    ap.add_argument("--json", dest="json_path", default="", metavar="PATH")
+    args = ap.parse_args(argv)
+    rows = run(render=True, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if args.json_path:
+        with open(args.json_path, "w") as fh:
+            json.dump({"schema": "asyncflow-bench-trajectory/v1",
+                       "suites": {"rollout": {"rows": rows, "error": None}},
+                       "smoke": args.smoke}, fh, indent=2, default=str)
+            fh.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

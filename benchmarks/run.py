@@ -8,6 +8,7 @@ and tracebacks go to stderr when recording a trajectory). Mapping:
   stability           — Fig. 12 (async vs sync reward)
   transfer_queue      — §3.5 (concurrency micro-benchmarks)
   stage_graph         — §4.1 (fused vs. staged pipeline bubbles)
+  rollout             — §3.3 (fixed-batch vs continuous-batching rollout)
   kernels             — kernel oracle timings + kernel-vs-oracle error
   roofline            — deliverable (g): dry-run roofline summary
 
@@ -57,8 +58,8 @@ def _host_config() -> dict:
 
 
 def main(argv=None) -> None:
-    from benchmarks import (ablation, gantt, kernel_bench, roofline, scaling,
-                            stability, stage_graph_bench,
+    from benchmarks import (ablation, gantt, kernel_bench, rollout_bench,
+                            roofline, scaling, stability, stage_graph_bench,
                             transfer_queue_bench)
 
     suites = [
@@ -68,6 +69,7 @@ def main(argv=None) -> None:
         ("stability", stability.run),
         ("transfer_queue", transfer_queue_bench.run),
         ("stage_graph", stage_graph_bench.run),
+        ("rollout", rollout_bench.run),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),
     ]

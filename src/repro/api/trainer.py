@@ -53,6 +53,9 @@ class TrainerConfig:
     reward: str = "exact"              # exact | shaped
     kl_coef: float = 0.0               # >0: adds the ref_inference stage
     chunk_tokens: int = 0              # >0: partial rollout (k1.5-style)
+    rollout_backend: str = "fixed"     # fixed | continuous (slot batcher)
+    cb_slots: int = 4                  # continuous backend: decode slots
+    cb_page_size: int = 8              # continuous backend: KV page size
     gamma: float = 1.0                 # PPO/GAE discount
     gae_lambda: float = 0.95           # PPO/GAE lambda
     checkpoint_dir: str = ""           # save final state when set
@@ -83,7 +86,9 @@ class Trainer:
             max_new_tokens=tcfg.max_new_tokens,
             reward_fn=(math_reward_shaped if tcfg.reward == "shaped"
                        else math_reward),
-            ref_params=ref_params, chunk_tokens=tcfg.chunk_tokens)
+            ref_params=ref_params, chunk_tokens=tcfg.chunk_tokens,
+            backend=tcfg.rollout_backend, cb_slots=tcfg.cb_slots,
+            cb_page_size=tcfg.cb_page_size, cb_seed=tcfg.seed)
         opt = OptimizerConfig(lr=tcfg.lr, warmup_steps=2,
                               total_steps=tcfg.num_steps,
                               schedule=cfg.lr_schedule

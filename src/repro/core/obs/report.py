@@ -105,4 +105,33 @@ def render_report(telemetry: dict) -> str:
         lines += ["", f"staleness: p50 {st['p50']:.1f} · "
                       f"p95 {st['p95']:.1f} · max {st['max']:.0f} "
                       f"({st['count']} samples)"]
+    rollout = _rollout_summary(telemetry.get("metrics", {}))
+    if rollout:
+        lines += ["", rollout]
     return "\n".join(lines)
+
+
+def _metric_values(metrics: dict, name: str) -> List[dict]:
+    return metrics.get(name, {}).get("values", [])
+
+
+def _rollout_summary(metrics: dict) -> str:
+    """One-line continuous-batching rollout summary: slot occupancy,
+    admissions, KV pages, and the prefill/decode time split."""
+    occ = _metric_values(metrics, "rollout_slot_occupancy")
+    if not occ:
+        return ""
+    adm = sum(v["value"] for v in
+              _metric_values(metrics, "rollout_admissions_total"))
+    pages = sum(v["value"] for v in
+                _metric_values(metrics, "rollout_kv_pages_in_use"))
+    pre = _metric_values(metrics, "rollout_prefill_seconds")
+    dec = _metric_values(metrics, "rollout_decode_step_seconds")
+    pre_s = sum(v.get("sum", 0.0) for v in pre)
+    dec_s = sum(v.get("sum", 0.0) for v in dec)
+    tot = pre_s + dec_s
+    split = (f"prefill {100 * pre_s / tot:.0f}% / "
+             f"decode {100 * dec_s / tot:.0f}%") if tot > 0 else "idle"
+    return (f"rollout: occupancy {occ[-1]['value']:.2f} · "
+            f"{int(adm)} admissions · {int(pages)} kv pages · {split} "
+            f"({tot:.2f}s)")

@@ -35,6 +35,7 @@ owned by the runner, so every dataflow — built-in or user-registered via
 """
 from __future__ import annotations
 
+import inspect
 import threading
 import time
 from dataclasses import dataclass, field
@@ -351,6 +352,34 @@ class StageRunner:
     # generate stage (weight-receiving producer)                          #
     # ------------------------------------------------------------------ #
 
+    def _put_rows(self, spec: StageSpec, out_cols, rows, version,
+                  c_samples, c_tokens) -> bool:
+        """Write finished experience rows into the TransferQueue (the
+        shared tail of batch-return and per-sample emit paths). Returns
+        False after failing the run on capacity overflow."""
+        if not rows:
+            return True
+        idxs = self.tq.next_indices(len(rows))
+        if idxs[-1] >= self.tq.capacity:
+            # beyond-capacity rows would be silently unschedulable
+            # (controllers ignore out-of-range notifications) — fail
+            # loudly instead: the graph's fan-out exceeds what the
+            # cfg-derived capacity accounts for
+            self._fail(
+                f"stage {spec.name!r} overflowed queue capacity "
+                f"{self.tq.capacity} (row {idxs[-1]}): generate "
+                f"fan-out exceeds cfg.group_size accounting")
+            return False
+        token_lens = [r.get("token_len", 0) for r in rows]
+        c_samples.inc(len(rows))
+        c_tokens.inc(sum(token_lens))
+        for j, col in enumerate(out_cols):
+            self.tq.put_batch(idxs, col, [r.get(col) for r in rows],
+                              token_lens=token_lens if j == 0 else None)
+        if "version" in spec.outputs:
+            self.tq.put_batch(idxs, "version", [version] * len(rows))
+        return True
+
     def _generate_worker(self, widx: int) -> None:
         spec = self.gen_stage
         name = f"rollout-{widx}"
@@ -363,6 +392,13 @@ class StageRunner:
         c_samples = self._c_samples.labels(stage=spec.name)
         c_tokens = self._c_tokens.labels(stage=spec.name)
         c_stalls = self._c_stalls.labels(stage=spec.name)
+        # per-sample handoff: a verb that accepts ``emit`` streams each
+        # finished row into the queue the moment its sequence completes
+        # (continuous batching), instead of returning them as one batch
+        try:
+            supports_emit = "emit" in inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            supports_emit = False
         while not self._stop.is_set():
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
                                 allow_partial=True)
@@ -398,10 +434,15 @@ class StageRunner:
 
             n_in = len(batch[self._source_col])
             t_gen = time.monotonic()
+            call_kw = dict(spec.kw)
+            if supports_emit:
+                v = recv.version
+                call_kw["emit"] = lambda row: self._put_rows(
+                    spec, out_cols, [row], v, c_samples, c_tokens)
             with self.log.span(name, "generate", version=recv.version,
                                n=n_in):
                 out = fn(batch, params=recv.params, rng=rng,
-                         version=recv.version, **spec.kw) or {}
+                         version=recv.version, **call_kw) or {}
             h_batch.observe(time.monotonic() - t_gen)
 
             conts = out.get("requeue") or []
@@ -410,29 +451,9 @@ class StageRunner:
                 self.tq.put_batch(cidx, self._source_col, conts,
                                   token_lens=[len(c["tokens"])
                                               for c in conts])
-            rows = out.get("rows") or []
-            if not rows:
-                continue
-            idxs = self.tq.next_indices(len(rows))
-            if idxs[-1] >= self.tq.capacity:
-                # beyond-capacity rows would be silently unschedulable
-                # (controllers ignore out-of-range notifications) — fail
-                # loudly instead: the graph's fan-out exceeds what the
-                # cfg-derived capacity accounts for
-                self._fail(
-                    f"stage {spec.name!r} overflowed queue capacity "
-                    f"{self.tq.capacity} (row {idxs[-1]}): generate "
-                    f"fan-out exceeds cfg.group_size accounting")
+            if not self._put_rows(spec, out_cols, out.get("rows") or [],
+                                  recv.version, c_samples, c_tokens):
                 return
-            token_lens = [r.get("token_len", 0) for r in rows]
-            c_samples.inc(len(rows))
-            c_tokens.inc(sum(token_lens))
-            for j, col in enumerate(out_cols):
-                self.tq.put_batch(idxs, col, [r.get(col) for r in rows],
-                                  token_lens=token_lens if j == 0 else None)
-            if "version" in spec.outputs:
-                self.tq.put_batch(idxs, "version",
-                                  [recv.version] * len(rows))
 
     # ------------------------------------------------------------------ #
     # transform stages (streaming map over rows)                          #

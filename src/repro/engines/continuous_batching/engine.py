@@ -1,0 +1,428 @@
+"""Continuous-batching rollout engine: slot scheduler + paged KV cache +
+disaggregated prefill/decode dispatch on one device.
+
+Two dispatch paths share the model:
+
+* **prefill** — waiting prompts are admitted into free decode slots in
+  padded length-buckets and run through the full-sequence forward once
+  (``return_cache=True``); the prompt KV lands in block-allocated pages
+  and the first response token is sampled from the prefill logits.
+* **decode** — one jitted step advances *every* occupied slot by one
+  token against its paged KV (gather pages -> ``decode_step`` -> scatter
+  the one written row back). ``use_pallas=True`` routes the inner
+  attention through ``kernels/decode_attention``; passing a ``mesh``
+  routes it through ``distributed/flash_decode``'s partial-softmax
+  combine.
+
+The moment a sequence finishes it is emitted (per-sample handoff — no
+batch barrier), its pages and slot free, and the next waiting prompt is
+admitted.  Partial rollout parks a paused sequence's pages between
+chunks, so a continuation resumes from its cached prefix instead of
+re-prefilling it (falling back to one prefill if its pages were
+preempted under pool pressure).
+
+Sampling uses a counter-based per-sequence PRNG — token ``i`` of
+sequence ``uid`` is always drawn with ``fold_in(fold_in(key, uid), i)``
+— so trajectories do not depend on slot assignment or batch composition.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+from typing import Sequence as SeqList
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.obs import get_registry
+from repro.data.tokenizer import ByteTokenizer
+from repro.engines.continuous_batching.paged_kv import (KVPoolExhausted,
+                                                        PagedKVPool)
+from repro.engines.continuous_batching.scheduler import (Sequence,
+                                                         SlotScheduler)
+from repro.models import decode_step, forward
+
+SUPPORTED_ARCHS = ("dense", "moe")
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _fold_keys(base_key, uids, positions):
+    """(B,) per-sequence counter keys: fold_in(fold_in(key, uid), pos)."""
+    return jax.vmap(lambda u, p: jax.random.fold_in(
+        jax.random.fold_in(base_key, u), p))(uids, positions)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "temperature", "use_pallas"))
+def _prefill_step(params, cfg, toks, lens, uids, base_key, *,
+                  temperature: float, use_pallas: bool):
+    """Bucketed prefill: one full forward over right-padded prompts
+    yields KV for every prompt position plus the first sampled response
+    token per row. Returns (k (L,B,S,KVH,hd), v, next_tok (B,), lp (B,))."""
+    logits, _, cache = forward(params, cfg, {"tokens": toks},
+                               use_pallas=use_pallas, return_cache=True)
+    last = jnp.take_along_axis(
+        logits, (lens - 1)[:, None, None], axis=1)[:, 0]      # (B, V)
+    lt = last.astype(jnp.float32) / max(temperature, 1e-6)
+    logp = jax.nn.log_softmax(lt, axis=-1)
+    nxt = jax.vmap(jax.random.categorical)(
+        _fold_keys(base_key, uids, lens), lt)
+    lp = jnp.take_along_axis(logp, nxt[:, None], axis=1)[:, 0]
+    if "dense_kv" in cache:            # moe: first_dense_layers prepended
+        k = jnp.concatenate([cache["dense_kv"]["k"], cache["kv"]["k"]], 0)
+        v = jnp.concatenate([cache["dense_kv"]["v"], cache["kv"]["v"]], 0)
+    else:
+        k, v = cache["kv"]["k"], cache["kv"]["v"]
+    return k, v, nxt, lp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "page_size", "temperature",
+                                    "use_pallas", "mesh"))
+def _decode_round_step(params, cfg, k_pool, v_pool, page_table, pos, tok,
+                       uids, base_key, *, page_size: int,
+                       temperature: float, use_pallas: bool, mesh):
+    """One continuous-batching decode step over every slot.
+
+    Gathers each slot's pages into a dense per-slot view, runs the
+    one-token ``decode_step`` (which writes the new KV row at ``pos``),
+    scatters that single row back into the page pool, and samples the
+    next token per slot with its counter-based key.  Idle slots carry
+    page-table rows of zeros, so their dummy writes land in the reserved
+    scratch page 0."""
+    L, _, ps, KVH, hd = k_pool.shape
+    B, PPS = page_table.shape
+    S = PPS * ps
+    k_view = k_pool[:, page_table].reshape(L, B, S, KVH, hd)
+    v_view = v_pool[:, page_table].reshape(L, B, S, KVH, hd)
+    logits, new_cache = decode_step(params, cfg,
+                                    {"k": k_view, "v": v_view}, tok, pos,
+                                    use_pallas=use_pallas, mesh=mesh)
+    bidx = jnp.arange(B)
+    phys = page_table[bidx, pos // page_size]                 # (B,)
+    off = pos % page_size
+    k_pool = k_pool.at[:, phys, off].set(new_cache["k"][:, bidx, pos])
+    v_pool = v_pool.at[:, phys, off].set(new_cache["v"][:, bidx, pos])
+
+    lt = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    logp = jax.nn.log_softmax(lt, axis=-1)
+    nxt = jax.vmap(jax.random.categorical)(
+        _fold_keys(base_key, uids, pos + 1), lt)
+    lp = jnp.take_along_axis(logp, nxt[:, None], axis=1)[:, 0]
+    return k_pool, v_pool, nxt, lp
+
+
+class ContinuousBatchingEngine:
+    """Slot-based streaming generation over a paged KV cache.
+
+    Parameters
+    ----------
+    cfg: model config (dense / moe GQA archs).
+    num_slots: decode-slot pool size (the decode batch dimension).
+    page_size: tokens per KV page.
+    max_len: max total sequence length (prompt + generation); rounded up
+        to a page multiple — fixes the decode attention window.
+    num_pages: physical page-pool size; the default gives every slot its
+        full page budget plus 50% headroom for parked continuations.
+    max_new_tokens / temperature / eos_id: sampling policy defaults.
+    seed: base of the counter-based sampling PRNG.
+    uid_start: first sequence id — lets a caller rebuild the engine
+        (e.g. to grow max_len) without colliding with earlier uids,
+        keeping every sequence's sampling stream stable.
+    use_pallas: dispatch decode attention to ``kernels/decode_attention``
+        (and prefill attention to ``kernels/flash_attention``).
+    mesh: optional device mesh — decode attention goes through
+        ``distributed/flash_decode``'s sharded partial-softmax combine.
+    """
+
+    def __init__(self, cfg, *, num_slots: int = 4, page_size: int = 8,
+                 max_len: int = 64, num_pages: Optional[int] = None,
+                 max_new_tokens: int = 8, temperature: float = 1.0,
+                 eos_id: int = ByteTokenizer.eos_id, seed: int = 0,
+                 uid_start: int = 0, dtype=None, use_pallas: bool = False,
+                 mesh=None, metrics=None):
+        if cfg.arch_type not in SUPPORTED_ARCHS or cfg.attention == "mla":
+            raise ValueError(
+                f"continuous batching supports GQA {SUPPORTED_ARCHS} archs "
+                f"(got arch_type={cfg.arch_type!r}, "
+                f"attention={cfg.attention!r})")
+        self.cfg = cfg
+        self.page_size = int(page_size)
+        self.max_len = -(-int(max_len) // self.page_size) * self.page_size
+        pages_per_seq = self.max_len // self.page_size
+        if num_pages is None:
+            budget = num_slots * pages_per_seq
+            num_pages = 1 + budget + budget // 2
+        self.pool = PagedKVPool(cfg, num_pages=num_pages,
+                                page_size=self.page_size,
+                                pages_per_seq=pages_per_seq, dtype=dtype)
+        self.scheduler = SlotScheduler(num_slots)
+        self.num_slots = int(num_slots)
+        self.max_new_tokens = int(max_new_tokens)
+        self.temperature = float(temperature)
+        self.eos_id = int(eos_id)
+        self.use_pallas = bool(use_pallas)
+        self.mesh = mesh
+        self._base_key = jax.random.PRNGKey(seed)
+        self._next_uid = int(uid_start)
+        self._parked: Dict[int, Sequence] = {}
+        self._lock = threading.Lock()
+
+        m = metrics if metrics is not None else get_registry()
+        self._registry = m
+        self._g_occupancy = m.gauge(
+            "rollout_slot_occupancy",
+            "fraction of decode slots occupied").labels(engine="cb")
+        self._g_pages = m.gauge(
+            "rollout_kv_pages_in_use",
+            "KV pages currently allocated").labels(engine="cb")
+        self._h_prefill = m.histogram(
+            "rollout_prefill_seconds",
+            "prefill dispatch latency per bucket").labels(engine="cb")
+        self._h_decode = m.histogram(
+            "rollout_decode_step_seconds",
+            "one continuous-batching decode step").labels(engine="cb")
+        self._c_admit = m.counter(
+            "rollout_admissions_total",
+            "prompts admitted into decode slots").labels(engine="cb")
+        self._c_preempt = m.counter(
+            "rollout_preemptions_total",
+            "sequences evicted under KV-pool pressure").labels(engine="cb")
+
+    # ------------------------------------------------------------------ #
+    # request construction                                                #
+    # ------------------------------------------------------------------ #
+
+    def make_sequence(self, tokens, *, max_new: Optional[int] = None,
+                      chunk: int = 0, meta: Optional[dict] = None
+                      ) -> Sequence:
+        toks = [int(t) for t in np.asarray(tokens).tolist()]
+        max_new = self.max_new_tokens if max_new is None else int(max_new)
+        if len(toks) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({len(toks)}) + max_new ({max_new}) exceeds "
+                f"engine max_len={self.max_len}")
+        uid, self._next_uid = self._next_uid, self._next_uid + 1
+        return Sequence(uid=uid, prompt_len=len(toks),
+                        tokens=toks, logprobs=[0.0] * len(toks),
+                        max_new=max_new, meta=dict(meta or {}),
+                        chunk_left=int(chunk) or max_new)
+
+    def resume(self, seq: Sequence, *, chunk: int = 0) -> Sequence:
+        """Re-arm a paused continuation for its next chunk."""
+        seq.chunk_left = int(chunk) or (seq.max_new - seq.gen_len)
+        return seq
+
+    # ------------------------------------------------------------------ #
+    # the scheduling loop                                                 #
+    # ------------------------------------------------------------------ #
+
+    def generate(self, params, items: SeqList[Sequence], *,
+                 version: int = 0,
+                 emit: Optional[Callable[[Sequence], None]] = None):
+        """Run every item to completion or chunk-pause.
+
+        Returns ``(finished, paused)`` lists of :class:`Sequence`; with
+        ``emit`` each finished sequence is handed off the moment it
+        completes (per-sample streaming), before the call returns."""
+        with self._lock:
+            return self._generate_locked(params, list(items), version,
+                                         emit)
+
+    def _generate_locked(self, params, items, version, emit):
+        sched = self.scheduler
+        for seq in items:
+            seq.versions.append(version)
+            self._parked.pop(seq.uid, None)
+            sched.admit(seq)
+        finished: List[Sequence] = []
+        paused: List[Sequence] = []
+        while not sched.idle:
+            admitted = self._admit_and_prefill(params)
+            if sched.num_active == 0:
+                if admitted == 0 and sched.num_waiting:
+                    raise RuntimeError(
+                        "KV pool exhausted and nothing to preempt: "
+                        f"{self.pool.free_pages} pages free — raise "
+                        f"num_pages or lower num_slots/max_len")
+                continue
+            self._decode_one_round(params, finished, paused, emit)
+        self._g_occupancy.set(0.0)
+        self._g_pages.set(self.pool.pages_in_use)
+        return finished, paused
+
+    # -- admission / prefill dispatch --------------------------------------
+
+    def _admit_and_prefill(self, params) -> int:
+        """Move waiting sequences into free slots (strict FIFO); prefill
+        fresh prefixes in padded length-buckets. Returns #admitted."""
+        assigns = self.scheduler.take_admissions()
+        if not assigns:
+            return 0
+        ok: List[tuple] = []
+        deferred = False
+        for slot, seq in assigns:
+            if deferred:        # keep FIFO: nothing overtakes a deferral
+                self.scheduler.defer(slot, seq)
+                continue
+            if not self._reserve_pages(seq):
+                self.scheduler.defer(slot, seq)
+                deferred = True
+                continue
+            ok.append((slot, seq))
+        if not ok:
+            return 0
+        self._c_admit.inc(len(ok))
+        need_prefill = [
+            (s, q) for s, q in ok
+            if self.pool.kv_len.get(q.uid, 0) < q.length - 1
+            or q.gen_len == 0]
+        buckets: Dict[int, List[tuple]] = {}
+        for s, q in need_prefill:
+            buckets.setdefault(((q.length + 7) // 8) * 8, []).append((s, q))
+        for pad_len, group in sorted(buckets.items()):
+            self._prefill_bucket(params, group, pad_len)
+        self._g_occupancy.set(self.scheduler.occupancy)
+        self._g_pages.set(self.pool.pages_in_use)
+        return len(ok)
+
+    def _reserve_pages(self, seq: Sequence) -> bool:
+        """Ensure ``seq`` owns pages for its current prefix, preempting
+        parked continuations under pool pressure."""
+        while True:
+            try:
+                if not self.pool.owns(seq.uid):
+                    self.pool.ensure(seq.uid, seq.length)
+                return True
+            except KVPoolExhausted:
+                if not self._evict_parked():
+                    return False
+
+    def _evict_parked(self) -> bool:
+        """Free the youngest parked continuation's pages (it re-prefills
+        on resume — its sampled trajectory is unchanged)."""
+        if not self._parked:
+            return False
+        uid = max(self._parked)        # youngest admission
+        self.pool.release(uid)
+        del self._parked[uid]
+        self._c_preempt.inc()
+        return True
+
+    def _prefill_bucket(self, params, group: List[tuple], pad_len: int):
+        """One prefill dispatch: right-padded prompts of similar length,
+        batch padded to a power of two for compile-shape reuse."""
+        t0 = time.monotonic()
+        n_real = len(group)
+        B = _next_pow2(n_real)
+        toks = np.zeros((B, pad_len), np.int32)
+        lens = np.ones(B, np.int32)
+        uids = np.zeros(B, np.int32)
+        for i, (_, q) in enumerate(group):
+            toks[i, :q.length] = q.tokens
+            lens[i] = q.length
+            uids[i] = q.uid
+        k, v, nxt, lp = _prefill_step(
+            params, self.cfg, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(uids), self._base_key,
+            temperature=self.temperature, use_pallas=self.use_pallas)
+        k = k.astype(self.pool.k.dtype)
+        v = v.astype(self.pool.v.dtype)
+        nxt, lp = np.asarray(nxt), np.asarray(lp)
+        for i, (_, q) in enumerate(group):
+            self.pool.write_prefill(q.uid, k[:, i], v[:, i], q.length)
+            self._append_token(q, int(nxt[i]), float(lp[i]))
+        self._h_prefill.observe(time.monotonic() - t0)
+
+    # -- decode dispatch ---------------------------------------------------
+
+    def _append_token(self, seq: Sequence, tok: int, lp: float) -> None:
+        seq.tokens.append(tok)
+        seq.logprobs.append(lp)
+        seq.gen_len += 1
+        seq.chunk_left -= 1
+        if tok == self.eos_id:
+            seq.eos = True
+
+    def _decode_one_round(self, params, finished, paused, emit) -> None:
+        """Advance every occupied slot one token; retire/park finishers."""
+        active = [(s, q) for s, q in self.scheduler.active()
+                  if not (q.done or q.paused)]
+        stepping = []
+        for s, q in active:
+            try:
+                self.pool.ensure(q.uid, q.length)  # page-boundary growth
+            except KVPoolExhausted:
+                if self._evict_parked():
+                    self.pool.ensure(q.uid, q.length)
+                else:
+                    # self-evict: drop this prefix's pages and requeue it
+                    # at the front — it re-prefills once space frees
+                    self.scheduler.release(s)
+                    self.pool.release(q.uid)
+                    self.scheduler.requeue_front(q)
+                    self._c_preempt.inc()
+                    continue
+            stepping.append((s, q))
+        if not stepping:
+            self._retire(finished, paused, emit)
+            return
+        t0 = time.monotonic()
+        B = self.num_slots
+        page_table = np.zeros((B, self.pool.pages_per_seq), np.int32)
+        pos = np.zeros(B, np.int32)
+        tok = np.zeros(B, np.int32)
+        uids = np.zeros(B, np.int32)
+        for s, q in stepping:
+            page_table[s] = self.pool.page_row(q.uid)
+            pos[s] = q.length - 1                  # KV row being written
+            tok[s] = q.tokens[-1]
+            uids[s] = q.uid
+        self.pool.k, self.pool.v, nxt, lp = _decode_round_step(
+            params, self.cfg, self.pool.k, self.pool.v,
+            jnp.asarray(page_table), jnp.asarray(pos), jnp.asarray(tok),
+            jnp.asarray(uids), self._base_key, page_size=self.page_size,
+            temperature=self.temperature, use_pallas=self.use_pallas,
+            mesh=self.mesh)
+        nxt, lp = np.asarray(nxt), np.asarray(lp)
+        for s, q in stepping:
+            self.pool.kv_len[q.uid] = q.length
+            self._append_token(q, int(nxt[s]), float(lp[s]))
+        self._h_decode.observe(time.monotonic() - t0)
+        self._retire(finished, paused, emit)
+
+    def _retire(self, finished, paused, emit) -> None:
+        """Free slots of finished/paused sequences (per-sample handoff:
+        a finished sequence is emitted immediately, and its slot is
+        available to the next waiting prompt on the same loop pass)."""
+        for s, q in self.scheduler.active():
+            if q.done:
+                self.scheduler.release(s)
+                self.pool.release(q.uid)
+                finished.append(q)
+                if emit is not None:
+                    emit(q)
+            elif q.paused:
+                self.scheduler.release(s)          # pages stay parked
+                self._parked[q.uid] = q
+                paused.append(q)
+        self._g_occupancy.set(self.scheduler.occupancy)
+        self._g_pages.set(self.pool.pages_in_use)
+
+    # ------------------------------------------------------------------ #
+    # maintenance                                                         #
+    # ------------------------------------------------------------------ #
+
+    def drop_parked(self, uid: int) -> None:
+        """Discard a parked continuation's pages (abandoned rollout)."""
+        self._parked.pop(uid, None)
+        self.pool.release(uid)

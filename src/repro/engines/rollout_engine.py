@@ -41,12 +41,25 @@ from repro.rl.sampling import generate as sample_generate
 class JaxRolloutEngine(RLAdapter):
     def __init__(self, cfg, *, group_size: int = 4, max_new_tokens: int = 8,
                  temperature: float = 1.0, reward_fn=math_reward,
-                 ref_params=None, chunk_tokens: int = 0):
+                 ref_params=None, chunk_tokens: int = 0,
+                 backend: str = "fixed", cb_slots: int = 4,
+                 cb_page_size: int = 8, cb_max_len: int = 0,
+                 cb_seed: int = 0, use_pallas: bool = False, mesh=None):
         """ref_params: frozen reference policy — enables the
         ``compute_log_prob`` reference-inference task (per-token ref
         logprobs for the KL penalty).
 
-        chunk_tokens > 0 enables partial rollout (see module docstring)."""
+        chunk_tokens > 0 enables partial rollout (see module docstring).
+
+        backend="continuous" routes sampling through the
+        ``engines/continuous_batching`` subsystem (slot scheduler + paged
+        KV cache): finished sequences stream out per-sample, and chunked
+        continuations resume from their cached KV pages instead of
+        re-prefilling the whole prefix. Sampling there is keyed per
+        (cb_seed, sequence, position), so trajectories are independent of
+        batch composition — fused and staged runs match by construction."""
+        if backend not in ("fixed", "continuous"):
+            raise ValueError(f"unknown rollout backend {backend!r}")
         self.cfg = cfg
         self.group_size = group_size
         self.max_new_tokens = max_new_tokens
@@ -54,6 +67,14 @@ class JaxRolloutEngine(RLAdapter):
         self.reward_fn = reward_fn
         self.ref_params = ref_params
         self.chunk_tokens = chunk_tokens
+        self.backend = backend
+        self.cb_slots = cb_slots
+        self.cb_page_size = cb_page_size
+        self.cb_max_len = cb_max_len
+        self.cb_seed = cb_seed
+        self.use_pallas = use_pallas
+        self.mesh = mesh
+        self._cb = None                  # lazy ContinuousBatchingEngine
         self._groups: dict = {}          # fused path: gid -> finished members
         self._reward_groups: dict = {}   # staged path: gid -> (member, idx, r)
         self._glock = threading.Lock()
@@ -68,9 +89,13 @@ class JaxRolloutEngine(RLAdapter):
     # staged verbs (stage-graph tasks)                                    #
     # ------------------------------------------------------------------ #
 
-    def _sample_rows(self, params, prompts: List[dict], rng) -> List[dict]:
+    def _sample_rows(self, params, prompts: List[dict], rng, *,
+                     version: int = 0, emit=None) -> List[dict]:
         """Sample prompts x G; one staged experience row per sample (no
         reward/advantage — those stream through their own stages)."""
+        if self.backend == "continuous":
+            return self._sample_rows_cb(params, prompts, version=version,
+                                        emit=emit)
         G = self.group_size
         flat = [p["tokens"] for p in prompts for _ in range(G)]
         seed = int(rng.integers(0, 2**31 - 1))
@@ -88,22 +113,125 @@ class JaxRolloutEngine(RLAdapter):
                     response_ids=o["response_ids"],
                     group=(gid, m, G), answer=p["answer"],
                     token_len=int(o["response_mask"].sum())))
+        if emit is not None:
+            for r in rows:
+                emit(r)
+            return []
         return rows
 
+    # ------------------------------------------------------------------ #
+    # continuous-batching backend                                         #
+    # ------------------------------------------------------------------ #
+
+    def _cb_engine(self, need_len: int):
+        """Lazy continuous-batching engine, rebuilt (uid space preserved)
+        if a longer prompt+budget arrives than the current max_len; parked
+        continuations survive a rebuild by re-prefilling on resume."""
+        from repro.engines.continuous_batching import \
+            ContinuousBatchingEngine
+        with self._glock:
+            eng = self._cb
+            if eng is None or need_len > eng.max_len:
+                self._cb = ContinuousBatchingEngine(
+                    self.cfg, num_slots=self.cb_slots,
+                    page_size=self.cb_page_size,
+                    max_len=max(need_len, self.cb_max_len,
+                                eng.max_len if eng else 0),
+                    max_new_tokens=self.max_new_tokens,
+                    temperature=self.temperature, seed=self.cb_seed,
+                    uid_start=0 if eng is None else eng._next_uid,
+                    use_pallas=self.use_pallas, mesh=self.mesh)
+            return self._cb
+
+    def _member_from_seq(self, q) -> dict:
+        """Finished/paused CB Sequence -> chunked member dict (the same
+        shape ``_member_row`` / ``_emit_finished_groups`` consume)."""
+        return {"_cont": True, "gid": q.meta["gid"],
+                "member": q.meta["member"], "prompt": q.meta["prompt"],
+                "tokens": np.asarray(q.tokens),
+                "logprobs": np.asarray(q.logprobs, np.float32),
+                "gen_len": q.gen_len, "versions": list(q.versions),
+                "_cb_seq": q}
+
+    def _sample_rows_cb(self, params, prompts: List[dict], *,
+                        version: int = 0, emit=None) -> List[dict]:
+        """One-shot sampling through the continuous batcher: slots admit
+        prompt×G members FIFO, finished rows stream out per-sample."""
+        G = self.group_size
+        need = max(len(p["tokens"]) for p in prompts) + self.max_new_tokens
+        eng = self._cb_engine(need)
+        seqs = []
+        for p in prompts:
+            gid = self._new_gid()
+            for m in range(G):
+                seqs.append(eng.make_sequence(
+                    p["tokens"], meta=dict(prompt=p, gid=gid, member=m)))
+        to_row = lambda q: self._member_row(self._member_from_seq(q),
+                                            chunked=False)
+        if emit is not None:
+            eng.generate(params, seqs, version=version,
+                         emit=lambda q: emit(to_row(q)))
+            return []
+        fin, _ = eng.generate(params, seqs, version=version)
+        fin.sort(key=lambda q: q.uid)    # restore prompt×G block order
+        return [to_row(q) for q in fin]
+
+    def _advance_chunks_cb(self, params, items: List[dict], *,
+                           version: int = 0, emit=None):
+        """Partial rollout on the paged KV cache: a continuation carries
+        its live ``Sequence`` (``_cb_seq``) whose KV pages stay parked in
+        the pool between chunks — resuming costs no re-prefill unless the
+        pages were preempted under pool pressure."""
+        C = self.chunk_tokens or self.max_new_tokens
+        G = self.group_size
+        need = self.max_new_tokens
+        for it in items:
+            if it.get("_cont"):
+                q = it["_cb_seq"]
+                need = max(need, q.prompt_len + q.max_new)
+            else:
+                need = max(need, len(it["tokens"]) + self.max_new_tokens)
+        eng = self._cb_engine(need)
+        seqs = []
+        for it in items:
+            if it.get("_cont"):
+                seqs.append(eng.resume(it["_cb_seq"], chunk=C))
+            else:
+                gid = self._new_gid()
+                for m in range(G):
+                    seqs.append(eng.make_sequence(
+                        it["tokens"], chunk=C,
+                        meta=dict(prompt=it, gid=gid, member=m)))
+        emit_cb = None if emit is None else \
+            (lambda q: emit(self._member_from_seq(q)))
+        fin, paused = eng.generate(params, seqs, version=version,
+                                   emit=emit_cb)
+        fin.sort(key=lambda q: q.uid)
+        finished = [] if emit is not None else \
+            [self._member_from_seq(q) for q in fin]
+        return finished, [self._member_from_seq(q) for q in paused]
+
     def generate_sequences(self, batch, *, params, rng, version: int = 0,
-                           **kw):
+                           emit=None, **kw):
         """Stage verb: batch["prompt"] -> {"rows": [...], "requeue": [...]}.
 
         Chunked engines emit each finished group member immediately — the
         downstream reward stage owns group completion, so members stream
-        out without waiting for their group."""
+        out without waiting for their group.  With the continuous backend
+        an ``emit`` callback receives each finished row the moment its
+        sequence completes (per-sample handoff into the TransferQueue);
+        emitted rows are excluded from the returned batch."""
         prompts = batch["prompt"]
         if self.chunk_tokens:
+            row_emit = None if emit is None else \
+                (lambda s: emit(self._member_row(s)))
             finished, conts = self._advance_chunks(params, prompts, rng,
-                                                   version=version)
+                                                   version=version,
+                                                   emit=row_emit)
             return {"rows": [self._member_row(s) for s in finished],
                     "requeue": conts}
-        return {"rows": self._sample_rows(params, prompts, rng)}
+        return {"rows": self._sample_rows(params, prompts, rng,
+                                          version=version, emit=emit)}
 
     def _ref_logprobs(self, responses, params=None) -> List[np.ndarray]:
         """Per-token logprobs of the frozen reference over full sequences
@@ -184,10 +312,15 @@ class JaxRolloutEngine(RLAdapter):
     # -- partial rollout (paper §4.2.1 / k1.5) ------------------------------
 
     def _advance_chunks(self, params, items: List[dict], rng, *,
-                        version: int = 0):
+                        version: int = 0, emit=None):
         """items: fresh prompt dicts or continuation dicts (``_cont``).
         Advances every sequence by at most ``chunk_tokens`` tokens.
-        Returns (finished_members, continuations)."""
+        Returns (finished_members, continuations); with ``emit`` every
+        finished member is delivered through the callback instead and the
+        returned finished list is empty."""
+        if self.backend == "continuous":
+            return self._advance_chunks_cb(params, items, version=version,
+                                           emit=emit)
         C = self.chunk_tokens or self.max_new_tokens
         seqs = []
         for it in items:
@@ -230,19 +363,26 @@ class JaxRolloutEngine(RLAdapter):
                 finished_members.append(s)
             else:
                 continuations.append(s)
+        if emit is not None:
+            for s in finished_members:
+                emit(s)
+            finished_members = []
         return finished_members, continuations
 
-    def _member_row(self, s: dict) -> dict:
+    def _member_row(self, s: dict, *, chunked: bool = True) -> dict:
         """Finished chunked member -> staged experience row."""
         p = s["prompt"]
         plen = len(np.asarray(p["tokens"]))
-        mask = np.zeros(len(s["tokens"]), np.float32)
+        toks = np.asarray(s["tokens"])
+        mask = np.zeros(len(toks), np.float32)
         mask[plen:] = 1.0
-        return dict(prompt=p, response=s["tokens"], logprob=s["logprobs"],
-                    response_mask=mask, response_ids=s["tokens"][plen:],
-                    group=(s["gid"], s["member"], self.group_size),
-                    answer=p["answer"], token_len=int(s["gen_len"]),
-                    chunk_versions=s["versions"])
+        row = dict(prompt=p, response=toks, logprob=s["logprobs"],
+                   response_mask=mask, response_ids=toks[plen:],
+                   group=(s["gid"], s["member"], self.group_size),
+                   answer=p["answer"], token_len=int(s["gen_len"]))
+        if chunked:
+            row["chunk_versions"] = s["versions"]
+        return row
 
     def generate_chunked(self, params, items: List[dict], rng, *,
                          version: int = 0):

@@ -2,7 +2,12 @@
 (the inference-cluster side of AsyncFlow, standalone).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_7b \
-      --requests 8 --max-new-tokens 16
+      --requests 8 --max-new-tokens 16 --engine continuous
+
+``--engine continuous`` serves through the same
+``engines/continuous_batching`` subsystem the RL rollout stage uses
+(slot scheduler + paged KV cache), so inference traffic and training
+rollouts share one engine; ``fixed`` keeps the padded-batch decode loop.
 """
 from __future__ import annotations
 
@@ -21,6 +26,10 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=("fixed", "continuous"),
+                    default="fixed")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (continuous engine)")
     args = ap.parse_args(argv)
 
     import jax
@@ -29,7 +38,6 @@ def main(argv=None):
     from repro.data import PromptDataset
     from repro.data.tokenizer import ByteTokenizer
     from repro.models import init_params
-    from repro.rl.sampling import generate
 
     tok = ByteTokenizer()
     cfg = dataclasses.replace(get_config(args.arch).reduced(),
@@ -41,17 +49,39 @@ def main(argv=None):
     t0 = time.time()
     n_tokens = 0
     outputs = []
-    for i in range(0, len(prompts), args.batch_size):
-        chunk = prompts[i:i + args.batch_size]
-        rows = generate(params, cfg, [p["tokens"] for p in chunk],
-                        args.seed + i, max_new_tokens=args.max_new_tokens,
-                        temperature=args.temperature)
-        for p, r in zip(chunk, rows):
-            outputs.append({"prompt": p["text"],
-                            "response": tok.decode(r["response_ids"])})
-            n_tokens += len(r["response_ids"])
+    if args.engine == "continuous":
+        from repro.engines.continuous_batching import \
+            ContinuousBatchingEngine
+        max_len = max(len(p["tokens"]) for p in prompts) \
+            + args.max_new_tokens
+        eng = ContinuousBatchingEngine(
+            cfg, num_slots=args.slots, max_len=max_len,
+            max_new_tokens=args.max_new_tokens,
+            temperature=args.temperature, seed=args.seed)
+        seqs = [eng.make_sequence(p["tokens"], meta={"prompt": p})
+                for p in prompts]
+        done, _ = eng.generate(params, seqs)
+        done.sort(key=lambda q: q.uid)
+        for q in done:
+            ids = q.tokens[q.prompt_len:]
+            outputs.append({"prompt": q.meta["prompt"]["text"],
+                            "response": tok.decode(ids)})
+            n_tokens += len(ids)
+    else:
+        from repro.rl.sampling import generate
+        for i in range(0, len(prompts), args.batch_size):
+            chunk = prompts[i:i + args.batch_size]
+            rows = generate(params, cfg, [p["tokens"] for p in chunk],
+                            args.seed + i,
+                            max_new_tokens=args.max_new_tokens,
+                            temperature=args.temperature)
+            for p, r in zip(chunk, rows):
+                outputs.append({"prompt": p["text"],
+                                "response": tok.decode(r["response_ids"])})
+                n_tokens += len(r["response_ids"])
     wall = time.time() - t0
-    print(json.dumps({"arch": args.arch, "requests": len(prompts),
+    print(json.dumps({"arch": args.arch, "engine": args.engine,
+                      "requests": len(prompts),
                       "wall_s": round(wall, 2),
                       "tokens_per_s": round(n_tokens / wall, 1),
                       "samples": outputs[:4]}, indent=1))

@@ -112,7 +112,7 @@ def init_kv_cache(cfg, batch, length, dtype=jnp.bfloat16, layers=None):
 
 
 def attend_decode(p, x, layer_cache, pos, cfg, *, ring=False, write=True,
-                  use_pallas=False):
+                  use_pallas=False, mesh=None):
     """One-token decode.
 
     x: (B, 1, d); layer_cache: {"k","v"} of (B, S_cache, nkv, hd);
@@ -120,6 +120,8 @@ def attend_decode(p, x, layer_cache, pos, cfg, *, ring=False, write=True,
     ring=True → sliding-window ring buffer (cache slot = pos % S_cache).
     write=False → read-only attention over the full provided cache (used for
     cross-attention with precomputed encoder K/V); no rotary on q either.
+    mesh → route attention through distributed/flash_decode's sharded
+    partial-softmax combine (cache seq dim sharded over "model").
 
     Returns (out (B,1,d), updated layer_cache).
     """
@@ -149,7 +151,11 @@ def attend_decode(p, x, layer_cache, pos, cfg, *, ring=False, write=True,
         valid = jnp.ones((B, S), bool)
     mask = valid[:, None, None, :]  # (B,1,1,S)
 
-    if use_pallas:
+    if mesh is not None:
+        from repro.distributed.flash_decode import sharded_decode_attention
+        out = sharded_decode_attention(q, k_cache.astype(cd),
+                                       v_cache.astype(cd), valid, mesh=mesh)
+    elif use_pallas:
         from repro.kernels.decode_attention.ops import decode_attention
         out = decode_attention(q, k_cache.astype(cd), v_cache.astype(cd), valid)
     else:

@@ -48,11 +48,15 @@ def init_cache(cfg, batch_size, length, dtype=jnp.bfloat16):
     return transformer.init_cache(cfg, batch_size, length, dtype)
 
 
-def decode_step(params, cfg, cache, token, pos, *, ring=False):
-    """One-token decode. token/pos: (B,). Returns (logits (B,V), cache)."""
+def decode_step(params, cfg, cache, token, pos, *, ring=False,
+                use_pallas=False, mesh=None):
+    """One-token decode. token/pos: (B,). Returns (logits (B,V), cache).
+    use_pallas → kernels/decode_attention; mesh → distributed sharded
+    flash-decode (dense/moe GQA only)."""
     if cfg.arch_type == "audio":
         return encdec.decode_step(params, cfg, cache, token, pos)
-    return transformer.decode_lm(params, cfg, cache, token, pos, ring=ring)
+    return transformer.decode_lm(params, cfg, cache, token, pos, ring=ring,
+                                 use_pallas=use_pallas, mesh=mesh)
 
 
 def decode_window(cfg, shape_name: str) -> tuple[int, bool]:

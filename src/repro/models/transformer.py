@@ -79,14 +79,16 @@ def _attn_block_full(p, x, cfg, ffn_kind, *, window, use_pallas, positions,
     return x + y, aux, kv
 
 
-def _attn_block_decode(p, x, layer_cache, pos, cfg, ffn_kind, *, ring):
+def _attn_block_decode(p, x, layer_cache, pos, cfg, ffn_kind, *, ring,
+                       use_pallas=False, mesh=None):
     h = norm(p["ln1"], x)
     if cfg.attention == "mla":
         y, new_cache = mla_mod.mla_decode(p["attn"], h, layer_cache, pos, cfg,
                                           ring=ring)
     else:
         y, new_cache = attn.attend_decode(p["attn"], h, layer_cache, pos, cfg,
-                                          ring=ring)
+                                          ring=ring, use_pallas=use_pallas,
+                                          mesh=mesh)
     x = x + y
     h = norm(p["ln2"], x)
     if ffn_kind == "moe":
@@ -364,9 +366,12 @@ def init_cache(cfg, batch, length, dtype=jnp.bfloat16):
     return attn.init_kv_cache(cfg, batch, length, dtype)
 
 
-def decode_lm(params, cfg, cache, token, pos, *, ring=False):
+def decode_lm(params, cfg, cache, token, pos, *, ring=False,
+              use_pallas=False, mesh=None):
     """token: (B,) int32; pos: (B,) absolute positions.
-    Returns (logits (B, V), new_cache)."""
+    Returns (logits (B, V), new_cache). use_pallas routes attention
+    through kernels/decode_attention; mesh through the sharded
+    flash-decode combine (dense/moe GQA paths only)."""
     cd = dtype_of(cfg.compute_dtype)
     x = embed(params["embed"], token[:, None], cd)  # (B,1,d)
 
@@ -453,7 +458,9 @@ def decode_lm(params, cfg, cache, token, pos, *, ring=False):
         def body_factory(kind):
             def body(h, xs):
                 blk, lc = xs
-                h, nc = _attn_block_decode(blk, h, lc, pos, cfg, kind, ring=ring)
+                h, nc = _attn_block_decode(blk, h, lc, pos, cfg, kind,
+                                           ring=ring, use_pallas=use_pallas,
+                                           mesh=mesh)
                 return h, nc
             return body
 

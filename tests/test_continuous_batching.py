@@ -1,0 +1,340 @@
+"""Continuous-batching subsystem: slot scheduler + paged KV cache +
+engine semantics (slot reuse, page accounting, EOS at boundaries,
+admission fairness) and GRPO equivalence through the stage graph."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+from repro.core.obs import MetricsRegistry
+from repro.data.tokenizer import ByteTokenizer
+from repro.engines.continuous_batching import (ContinuousBatchingEngine,
+                                               KVPoolExhausted, PagedKVPool,
+                                               SlotScheduler)
+
+
+def _cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def cb_params():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def cfg_and_params():
+    cfg = _cfg()
+    from repro.models import init_params
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(cfg, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("max_new_tokens", 6)
+    kw.setdefault("seed", 7)
+    return ContinuousBatchingEngine(cfg, **kw)
+
+
+# ---------------------------------------------------------------------- #
+# scheduler core (pure Python)                                            #
+# ---------------------------------------------------------------------- #
+
+def _seq(eng, toks, **kw):
+    return eng.make_sequence(toks, **kw)
+
+
+def test_admission_fairness_fifo():
+    """Waiting queue outnumbers slots: admissions happen in strict
+    arrival order, and a deferred sequence is never overtaken."""
+    sched = SlotScheduler(2)
+    eng_seqs = []
+    for i in range(6):
+        s = type("S", (), {})()
+        s.uid = i
+        sched.admit(s)
+        eng_seqs.append(s)
+    first = sched.take_admissions()
+    assert [q.uid for _, q in first] == [0, 1]
+    assert sched.take_admissions() == []          # no free slots
+    # defer puts the sequence back at the FRONT
+    slot0, q0 = first[0]
+    sched.defer(slot0, q0)
+    nxt = sched.take_admissions()
+    assert [q.uid for _, q in nxt] == [0]         # not overtaken by 2..5
+    # releases admit strictly in arrival order
+    sched.release(nxt[0][0])
+    sched.release(first[1][0])
+    again = sched.take_admissions()
+    assert [q.uid for _, q in again] == [2, 3]
+    assert sched.num_waiting == 2
+    # admitted_at stamps are monotone in arrival order
+    assert eng_seqs[0].admitted_at < eng_seqs[1].admitted_at
+
+
+def test_slot_reuse_after_release():
+    sched = SlotScheduler(1)
+    a, b = (type("S", (), {"uid": i})() for i in (0, 1))
+    sched.admit(a)
+    sched.admit(b)
+    (s0, q), = sched.take_admissions()
+    assert q is a
+    sched.release(s0)
+    (s1, q2), = sched.take_admissions()
+    assert s1 == s0 and q2 is b                   # freed slot reused
+    assert sched.occupancy == 1.0
+    sched.release(s1)
+    assert sched.idle
+
+
+# ---------------------------------------------------------------------- #
+# paged KV pool                                                           #
+# ---------------------------------------------------------------------- #
+
+def test_kv_page_alloc_free_no_leak():
+    cfg = _cfg()
+    pool = PagedKVPool(cfg, num_pages=9, page_size=4, pages_per_seq=4)
+    total = pool.free_pages
+    assert total == 8                              # page 0 reserved
+    pool.ensure(0, 5)                              # 2 pages
+    pool.ensure(1, 13)                             # 4 pages
+    assert pool.pages_in_use == 6 and pool.free_pages == 2
+    # growth is incremental, not re-allocation
+    pool.ensure(0, 8)
+    assert len(pool.page_row(0).nonzero()[0]) == 2
+    pool.ensure(0, 9)
+    assert pool.pages_in_use == 7
+    # exhaustion allocates nothing (no partial leak)
+    with pytest.raises(KVPoolExhausted):
+        pool.ensure(2, 12)
+    assert not pool.owns(2) and pool.free_pages == 1
+    pool.release(0)
+    pool.release(1)
+    assert pool.pages_in_use == 0 and pool.free_pages == total
+    # many admission/release cycles never leak
+    for it in range(20):
+        uid = 100 + it
+        pool.ensure(uid, 16)
+        pool.release(uid)
+    assert pool.free_pages == total
+
+
+def test_kv_pool_over_budget_rejected():
+    pool = PagedKVPool(_cfg(), num_pages=9, page_size=4, pages_per_seq=2)
+    with pytest.raises(ValueError, match="pages_per_seq"):
+        pool.ensure(0, 9)                          # needs 3 > budget 2
+
+
+# ---------------------------------------------------------------------- #
+# engine: slot reuse / emission / boundaries                              #
+# ---------------------------------------------------------------------- #
+
+def test_engine_slot_reuse_and_no_page_leak(cfg_and_params):
+    """More sequences than slots: finished sequences free slots for the
+    waiting queue, every page returns to the pool, rows stream out
+    per-sample via emit."""
+    cfg, params = cfg_and_params
+    reg = MetricsRegistry()
+    eng = _engine(cfg, metrics=reg)
+    seqs = [eng.make_sequence([3 + i, 4, 5]) for i in range(5)]
+    emitted = []
+    fin, paused = eng.generate(params, seqs, emit=lambda q: emitted.append(q.uid))
+    assert len(fin) == 5 and not paused
+    assert sorted(emitted) == [q.uid for q in sorted(fin, key=lambda q: q.uid)]
+    assert eng.pool.pages_in_use == 0 and eng.scheduler.idle
+    snap = reg.snapshot()
+    adm = snap["rollout_admissions_total"]["values"]
+    assert sum(v["value"] for v in adm) == 5
+    assert snap["rollout_prefill_seconds"]["values"][0]["count"] >= 1
+    assert snap["rollout_decode_step_seconds"]["values"][0]["count"] >= 1
+    assert "rollout_slot_occupancy" in snap
+    assert "rollout_kv_pages_in_use" in snap
+
+
+def _greedy_tokens(cfg, params, prompt, n, page_size=4, chunk=0):
+    """One rollout with an unreachable EOS; returns generated tokens."""
+    eng = _engine(cfg, page_size=page_size, max_new_tokens=n,
+                  eos_id=-1, temperature=1.0)
+    seq = eng.make_sequence(prompt, chunk=chunk)
+    items = [seq]
+    while items:
+        fin, paused = eng.generate(params, items)
+        items = [eng.resume(q, chunk=chunk) for q in paused]
+    return seq.tokens
+
+
+def test_eos_exactly_at_page_boundary(cfg_and_params):
+    """EOS lands on the last position of a KV page: the sequence retires
+    with exact page accounting (no page held for a phantom next token)."""
+    cfg, params = cfg_and_params
+    prompt = [5, 6, 7]
+    toks = _greedy_tokens(cfg, params, prompt, 9, page_size=4)
+    # position len(toks)-1... choose the token that lands at an exact
+    # page boundary (length % page_size == 0 after appending it)
+    boundary_idx = None
+    for i in range(len(prompt) + 1, len(toks)):    # past the prefill token
+        if (i + 1) % 4 == 0:
+            boundary_idx = i
+            break
+    assert boundary_idx is not None
+    eos_tok = toks[boundary_idx]
+    eng = _engine(cfg, page_size=4, max_new_tokens=9, eos_id=eos_tok)
+    seq = eng.make_sequence(prompt)
+    fin, _ = eng.generate(params, [seq])
+    assert fin[0].tokens == toks[:boundary_idx + 1]
+    assert fin[0].eos and len(fin[0].tokens) % 4 == 0
+    assert eng.pool.pages_in_use == 0 and eng.pool.free_pages == \
+        eng.pool.num_pages - 1
+
+
+def test_eos_exactly_at_chunk_boundary(cfg_and_params):
+    """EOS on the last token of a partial-rollout chunk: the sequence
+    finishes in that chunk (no empty continuation), pages all free."""
+    cfg, params = cfg_and_params
+    prompt = [8, 9, 10]
+    chunk = 3
+    toks = _greedy_tokens(cfg, params, prompt, 9, chunk=chunk)
+    eos_tok = toks[len(prompt) + chunk - 1]        # last token of chunk 1
+    eng = _engine(cfg, max_new_tokens=9, eos_id=eos_tok)
+    seq = eng.make_sequence(prompt, chunk=chunk)
+    fin, paused = eng.generate(params, [seq])
+    assert [q.uid for q in fin] == [seq.uid] and not paused
+    assert fin[0].gen_len == chunk and fin[0].eos
+    assert fin[0].tokens == toks[:len(prompt) + chunk]
+    assert eng.pool.pages_in_use == 0 and not eng._parked
+
+
+def test_parked_continuation_keeps_pages(cfg_and_params):
+    """A paused chunk keeps its KV pages parked (no re-prefill on
+    resume); trajectories match a one-shot rollout exactly."""
+    cfg, params = cfg_and_params
+    prompt = [11, 12, 13, 14]
+    full = _greedy_tokens(cfg, params, prompt, 8)
+    eng = _engine(cfg, max_new_tokens=8, eos_id=-1)
+    seq = eng.make_sequence(prompt, chunk=4)
+    fin, paused = eng.generate(params, [seq])
+    assert paused == [seq] and not fin
+    assert eng.pool.owns(seq.uid)                  # pages parked
+    assert eng.pool.pages_in_use > 0
+    fin, paused = eng.generate(params, [eng.resume(seq, chunk=4)])
+    assert fin == [seq] and not paused
+    assert seq.tokens == full
+    assert eng.pool.pages_in_use == 0
+
+
+def test_preempted_parked_pages_refill_deterministically(cfg_and_params):
+    """Under KV-pool pressure parked pages are evicted; the continuation
+    re-prefills on resume and still reproduces the same trajectory."""
+    cfg, params = cfg_and_params
+    prompts = [[5, 6, 7], [8, 9, 10, 11], [3, 4], [250, 251, 252]]
+
+    def run(num_pages):
+        eng = _engine(cfg, num_pages=num_pages, max_new_tokens=8, seed=3)
+        items = [eng.make_sequence(p, chunk=3) for p in prompts]
+        done = []
+        v = 0
+        while items:
+            fin, paused = eng.generate(params, items, version=v)
+            done += fin
+            items = [eng.resume(q, chunk=3) for q in paused]
+            v += 1
+        return eng, {q.uid: q.tokens for q in done}
+
+    eng_big, roomy = run(None)                     # default: headroom
+    eng_small, tight = run(17)                     # forces preemption
+    assert roomy == tight
+    assert eng_small.pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------- #
+# GRPO through the stage graph: continuous backend, fused == staged       #
+# ---------------------------------------------------------------------- #
+
+def test_grpo_cb_staged_matches_fused_fixed_seed():
+    """Continuous-batching backend end-to-end: the fused facade and the
+    staged dataflow train identically on a fixed seed (counter-keyed
+    sampling makes trajectories batch-composition independent)."""
+    from repro.api import Trainer, TrainerConfig
+    from repro.core.workflow import AsyncRLRunner, WorkflowConfig
+    from repro.data import PromptDataset
+    from repro.engines import JaxRolloutEngine, JaxTrainEngine
+    from repro.models import init_params
+    from repro.rl.grpo import GRPOConfig
+    from repro.training.optimizer import OptimizerConfig
+
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    common = dict(mode="baseline", num_steps=2, prompts_per_step=2,
+                  group_size=2, train_micro_batch=4)
+    opt = OptimizerConfig(lr=3e-4, warmup_steps=2, total_steps=2,
+                          schedule=cfg.lr_schedule
+                          if cfg.lr_schedule != "cosine" else "constant")
+    fused = AsyncRLRunner(
+        WorkflowConfig(num_rollout_workers=1, rollout_batch=2,
+                       num_storage_units=1, **common),
+        rollout_engine=JaxRolloutEngine(cfg, group_size=2,
+                                        max_new_tokens=4,
+                                        backend="continuous", cb_slots=2,
+                                        cb_seed=0),
+        train_engine=JaxTrainEngine(cfg, params, rl=GRPOConfig(), opt=opt,
+                                    global_batch=4, seq_len=24),
+        prompt_stream=lambda s: PromptDataset(seed=0).prompts_for_step(
+            s, 2))
+    r_fused = fused.run()
+
+    tcfg = TrainerConfig(num_steps=2, prompts_per_step=2, group_size=2,
+                         rollout_workers=1, rollout_batch=2,
+                         train_micro_batch=4, max_new_tokens=4, seq_len=24,
+                         mode="baseline", num_storage_units=1, seed=0,
+                         rollout_backend="continuous", cb_slots=2)
+    r_staged = Trainer(tcfg, model_cfg=cfg, params=params).fit()
+
+    assert len(r_fused.metrics) == len(r_staged.metrics) == 2
+    for mf, ms in zip(r_fused.metrics, r_staged.metrics):
+        assert mf["step"] == ms["step"]
+        for k in ("loss", "policy_loss", "grad_norm", "mean_reward"):
+            np.testing.assert_allclose(mf[k], ms[k], rtol=1e-4, atol=1e-5,
+                                       err_msg=k)
+
+
+def test_cb_chunked_rollout_matches_oneshot_rows():
+    """The chunked CB path (paged-KV continuations, no re-prefill)
+    produces the same experience rows as one-shot CB generation."""
+    from repro.engines import JaxRolloutEngine
+    from repro.models import init_params
+
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prompts = [dict(tokens=np.asarray([5, 6, 7]), answer=1),
+               dict(tokens=np.asarray([8, 9, 10, 11]), answer=2)]
+    rng = np.random.default_rng(0)
+
+    base = JaxRolloutEngine(cfg, group_size=2, max_new_tokens=6,
+                            backend="continuous", cb_slots=2, cb_seed=3)
+    rows = base.generate(params, prompts, rng)
+
+    chunked = JaxRolloutEngine(cfg, group_size=2, max_new_tokens=6,
+                               chunk_tokens=2, backend="continuous",
+                               cb_slots=2, cb_seed=3)
+    items, got, v = list(prompts), [], 0
+    while items:
+        rws, conts = chunked.generate_chunked(params, items, rng,
+                                              version=v)
+        got += rws
+        items = conts
+        v += 1
+    assert sorted(r["response"].tolist() for r in got) == \
+        sorted(r["response"].tolist() for r in rows)
+    for r in got:
+        assert len(r["chunk_versions"]) >= 1
+        np.testing.assert_allclose(
+            np.asarray(r["logprob"], np.float32)[r["response_mask"] > 0],
+            np.asarray([x for q in rows
+                        if q["response"].tolist() == r["response"].tolist()
+                        for x in np.asarray(q["logprob"], np.float32)[
+                            q["response_mask"] > 0]]),
+            rtol=1e-5)
