@@ -1,6 +1,13 @@
 """Kernel-layer benchmark: jnp-oracle wall time on CPU (the Pallas kernels
 are TPU-target; interpret mode is a correctness harness, not a timing
-one) + allclose deltas vs the kernels."""
+one) + allclose deltas vs the kernels + the fused RL hot-path:
+``fused_rl_loss`` forward+backward against the unfused three-op
+composition (token_logprobs + kl_penalty + clipped_policy_loss).
+
+Standalone CLI: ``python -m benchmarks.kernel_bench [--smoke] [--json P]``
+— the CI kernel smoke lane runs ``--smoke --json BENCH_ci_kernels.json``
+(reduced shapes + an interpret-mode parity row for the fused kernel).
+"""
 from __future__ import annotations
 
 import time
@@ -20,7 +27,84 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
-def run() -> list[dict]:
+def fused_rl_loss_rows(B, S, V, *, include_interpret=False,
+                       iters=2) -> list[dict]:
+    """value_and_grad wall time: fused one-pass actor loss vs the unfused
+    composition on the same (B, S, V) logits. ``derived`` on the fused
+    row is the speedup (>1 means the fusion wins)."""
+    from repro.rl.loss import (clipped_policy_loss, fused_actor_loss,
+                               kl_penalty, token_logprobs)
+
+    key = jax.random.PRNGKey(7)
+    k = lambda i: jax.random.fold_in(key, i)
+    logits = 3 * jax.random.normal(k(1), (B, S, V))
+    tg = jax.random.randint(k(2), (B, S), 0, V)
+    adv = jax.random.normal(k(5), (B,))
+    mask = jnp.ones((B, S))
+    # realistic ratios near 1: old/ref policies a small perturbation away
+    # from the current one (otherwise exp(ref - lp) in the k3 KL explodes)
+    from repro.rl.loss import token_logprobs as _tlp
+    lp0 = jax.lax.stop_gradient(_tlp(logits, tg)[0])
+    old = lp0 + 0.1 * jax.random.normal(k(3), (B, S))
+    ref = lp0 + 0.1 * jax.random.normal(k(4), (B, S))
+
+    def unfused(lg):
+        lp, ent = token_logprobs(lg, tg)
+        pl, _ = clipped_policy_loss(lp, old, adv, mask)
+        kl = kl_penalty(lp, ref, mask)
+        ent_mean = (ent * mask).sum() / mask.sum()
+        return pl + 0.05 * kl - 0.01 * ent_mean
+
+    def fused(lg):
+        loss, _ = fused_actor_loss(lg, tg, old, adv, mask, ref_logprob=ref,
+                                   kl_coef=0.05, entropy_coef=0.01)
+        return loss
+
+    g_unf = jax.jit(jax.value_and_grad(unfused))
+    g_fus = jax.jit(jax.value_and_grad(fused))
+    t_unf = _time(g_unf, logits, iters=iters)
+    t_fus = _time(g_fus, logits, iters=iters)
+    (v_u, d_u), (v_f, d_f) = g_unf(logits), g_fus(logits)
+    err = max(float(jnp.abs(v_u - v_f)), float(jnp.abs(d_u - d_f).max()))
+    rows = [
+        dict(name=f"rl_loss_unfused_fwdbwd_{B * S}x{V}",
+             us_per_call=t_unf * 1e6, derived=err),
+        dict(name=f"rl_loss_fused_fwdbwd_{B * S}x{V}",
+             us_per_call=t_fus * 1e6, derived=t_unf / t_fus),
+    ]
+    if include_interpret:
+        from repro.kernels.fused_rl_loss import (fused_rl_loss,
+                                                 fused_rl_loss_ref)
+        n, v = 32, 512
+        lg = 3 * jax.random.normal(k(6), (n, v))
+        tgs = jax.random.randint(k(7), (n,), 0, v)
+        lps = jax.nn.log_softmax(lg)[jnp.arange(n), tgs]
+        olds = lps + 0.1 * jax.random.normal(k(8), (n,))
+        refs_lp = lps + 0.1 * jax.random.normal(k(9), (n,))
+        advs = jax.random.normal(k(10), (n,))
+        t0 = time.perf_counter()
+        outs = fused_rl_loss(lg, tgs, olds, refs_lp, advs,
+                             use_pallas=True, block_n=8, block_v=128)
+        refs = fused_rl_loss_ref(lg, tgs, olds, refs_lp, advs)
+        # relative: kl = exp(d)-d-1 amplifies fp32 logprob noise
+        perr = max(float(jnp.abs(o - r).max() / (jnp.abs(r).max() + 1.0))
+                   for o, r in zip(outs, refs))
+        rows.append(dict(name="fused_rl_loss_interpret_parity",
+                         us_per_call=(time.perf_counter() - t0) * 1e6,
+                         derived=perr))
+    return rows
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        # CI lane: reduced shapes + interpret-mode parity, seconds not
+        # minutes — the full run exercises the paper-scale vocab instead
+        rows = fused_rl_loss_rows(4, 64, 8192, include_interpret=True)
+        return rows + _oracle_rows()
+    return _oracle_rows() + fused_rl_loss_rows(16, 128, 32768)
+
+
+def _oracle_rows() -> list[dict]:
     from repro.kernels.decode_attention import (decode_attention,
                                                 decode_attention_ref)
     from repro.kernels.flash_attention import (flash_attention,
@@ -85,6 +169,36 @@ def run() -> list[dict]:
     return rows
 
 
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description="kernel benchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes + interpret parity (CI lane)")
+    ap.add_argument("--json", dest="json_path", default="", metavar="PATH",
+                    help="write an asyncflow-bench-trajectory/v1 file")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    if args.json_path:
+        from benchmarks.run import _git_rev, _host_config
+        doc = {"schema": "asyncflow-bench-trajectory/v1",
+               "git_rev": _git_rev(),
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                          time.gmtime(t0)),
+               "elapsed_s": round(time.time() - t0, 3),
+               "config": _host_config(),
+               "suites": {"kernels": {"rows": rows, "error": None,
+                                      "elapsed_s": round(
+                                          time.time() - t0, 3)}}}
+        with open(args.json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, default=str)
+            fh.write("\n")
+
+
 if __name__ == "__main__":
-    for row in run():
-        print(row)
+    main()

@@ -1,10 +1,49 @@
 """Roofline table (deliverable g): aggregates results/dryrun/*.json into
-the per-(arch x shape x mesh) three-term roofline + bottleneck report."""
+the per-(arch x shape x mesh) three-term roofline + bottleneck report,
+plus arithmetic-intensity points for the hand-written kernels (flash
+attention, grpo_logprob, and the fused RL hot path whose single streamed
+logits pass replaces the unfused composition's three)."""
 from __future__ import annotations
 
 import glob
 import json
 import os
+
+
+def kernel_ai_rows(N: int = 2048, V: int = 32768, S: int = 2048,
+                   hd: int = 64) -> list[dict]:
+    """Arithmetic intensity (flops per HBM byte, fp32) of the kernel
+    layer. ``derived`` is the AI; all are far below the ~240 flops/byte
+    TPU ridge, so every vocab/seq-streaming kernel is bandwidth-bound and
+    logits traffic is the thing to optimize.
+
+    The fused RL loss streams the (N, V) logits ONCE in forward (online
+    LSE + entropy + target pickup in the same pass) and once in backward
+    (softmax recomputed from saved per-token statistics); the unfused
+    token_logprobs + kl_penalty + clipped_policy_loss composition costs
+    three forward-side reads (log-softmax output, entropy pass, autodiff
+    residual) for the same ~6 flops per element.
+    """
+    flops_per_elt = 6.0                      # max-scan, sub, exp, 2 acc, cmp
+    bytes_elt = 4.0
+    ai_fused = flops_per_elt / bytes_elt
+    ai_unfused = flops_per_elt / (3 * bytes_elt)
+    ai_logprob = 5.0 / bytes_elt             # no surrogate/KL epilogue
+    # flash attention: 2 matmuls (4*S^2*hd flops) over ~4 S x hd tensors
+    ai_flash = (4.0 * S * S * hd) / (4 * bytes_elt * S * hd)
+    return [
+        dict(name=f"kernel_ai_flash_attention_{S}x{hd}", us_per_call=0.0,
+             derived=round(ai_flash, 3)),
+        dict(name=f"kernel_ai_grpo_logprob_{N}x{V}", us_per_call=0.0,
+             derived=round(ai_logprob, 3)),
+        dict(name=f"kernel_ai_rl_loss_unfused_{N}x{V}", us_per_call=0.0,
+             derived=round(ai_unfused, 3)),
+        dict(name=f"kernel_ai_rl_loss_fused_{N}x{V}", us_per_call=0.0,
+             derived=round(ai_fused, 3)),
+        # the headline: forward logits HBM traffic, unfused over fused
+        dict(name="kernel_logits_reads_unfused_over_fused", us_per_call=0.0,
+             derived=3.0),
+    ]
 
 HEADER = ("arch", "shape", "mesh", "t_compute", "t_memory", "t_collective",
           "bottleneck", "useful_ratio")
@@ -61,8 +100,11 @@ def run() -> list[dict]:
                      derived=n_skip))
     rows.append(dict(name="dryrun_combos_failed", us_per_call=0.0,
                      derived=n_err))
+    rows.extend(kernel_ai_rows())
     return rows
 
 
 if __name__ == "__main__":
     print(table(load()))
+    for r in kernel_ai_rows():
+        print(f"{r['name']}: AI={r['derived']}")

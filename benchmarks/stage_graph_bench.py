@@ -82,7 +82,16 @@ def run(render: bool = False) -> list[dict]:
         kl_coef=w["kl_coef"], seed=0)
     r_staged = Trainer(tcfg, model_cfg=cfg).fit()
 
-    for label, r in (("fused", r_fused), ("staged", r_staged)):
+    # ---- planner-sized: identical dataflow, every stage left at
+    # num_workers=0 and auto-sized from the analytic cost model; the
+    # elastic monitor may rebalance pools mid-run ----
+    pcfg = dataclasses.replace(tcfg, rollout_workers=0,
+                               auto_size_workers=True,
+                               elastic_interval_s=0.2)
+    r_planned = Trainer(pcfg, model_cfg=cfg).fit()
+
+    for label, r in (("fused", r_fused), ("staged", r_staged),
+                     ("planned", r_planned)):
         bf = r.bubble_fraction
         roll = [v for k, v in bf.items() if k.startswith("rollout")]
         rows.append(dict(name=f"stage_graph_{label}_rollout_bubble",

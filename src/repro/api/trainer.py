@@ -15,7 +15,7 @@ advantage, actor/critic update) streams as its own pipeline stage.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 
@@ -48,7 +48,7 @@ class TrainerConfig:
     lr: float = 3e-4
     seed: int = 0
     seq_len: int = 32
-    policy: str = "fifo"
+    policy: Any = "fifo"       # str, or {task: str} per consumer stage
     num_storage_units: int = 2
     reward: str = "exact"              # exact | shaped
     kl_coef: float = 0.0               # >0: adds the ref_inference stage
@@ -56,12 +56,17 @@ class TrainerConfig:
     rollout_backend: str = "fixed"     # fixed | continuous (slot batcher)
     cb_slots: int = 4                  # continuous backend: decode slots
     cb_page_size: int = 8              # continuous backend: KV page size
+    use_pallas: bool = False           # fused Pallas RL-loss kernel in the
+                                       # actor update (interpret off-TPU)
     gamma: float = 1.0                 # PPO/GAE discount
     gae_lambda: float = 0.95           # PPO/GAE lambda
     checkpoint_dir: str = ""           # save final state when set
     channel_bandwidth_gbps: float = 0.0  # simulated host-net weight path
     metrics_jsonl: str = ""            # periodic metrics snapshots (JSONL)
     metrics_interval_s: float = 0.25   # sampler cadence when enabled
+    auto_size_workers: bool = False    # planner-size stages left at 0
+    elastic_interval_s: float = 0.0    # >0: live rebalance cadence (s)
+    max_stage_workers: int = 8         # auto-size / elastic pool cap
 
 
 class Trainer:
@@ -95,7 +100,8 @@ class Trainer:
                               if cfg.lr_schedule != "cosine" else "constant")
         global_batch = tcfg.prompts_per_step * tcfg.group_size
         if tcfg.algorithm == "ppo":
-            rl_cfg = PPOConfig(kl_coef=tcfg.kl_coef)
+            rl_cfg = PPOConfig(kl_coef=tcfg.kl_coef,
+                               use_pallas_logprob=tcfg.use_pallas)
             self.train_engine = JaxTrainEngine(
                 cfg, params, rl=rl_cfg, opt=opt, algorithm="ppo",
                 global_batch=global_batch, seq_len=tcfg.seq_len)
@@ -106,8 +112,10 @@ class Trainer:
                 seq_len=tcfg.seq_len)
         else:
             self.train_engine = JaxTrainEngine(
-                cfg, params, rl=GRPOConfig(kl_coef=tcfg.kl_coef), opt=opt,
-                global_batch=global_batch, seq_len=tcfg.seq_len)
+                cfg, params,
+                rl=GRPOConfig(kl_coef=tcfg.kl_coef,
+                              use_pallas_logprob=tcfg.use_pallas),
+                opt=opt, global_batch=global_batch, seq_len=tcfg.seq_len)
             self.critic_engine = None
         self.engines = {"rollout": self.rollout_engine,
                         "actor": self.train_engine}
@@ -131,7 +139,10 @@ class Trainer:
             num_storage_units=t.num_storage_units,
             channel_bandwidth_gbps=t.channel_bandwidth_gbps,
             metrics_jsonl=t.metrics_jsonl,
-            metrics_interval_s=t.metrics_interval_s)
+            metrics_interval_s=t.metrics_interval_s,
+            auto_size_workers=t.auto_size_workers,
+            elastic_interval_s=t.elastic_interval_s,
+            max_stage_workers=t.max_stage_workers)
         graph = build_dataflow(t.algorithm, kl_coef=t.kl_coef,
                                gamma=t.gamma, lam=t.gae_lambda)
         runner = StageRunner(

@@ -61,6 +61,27 @@ def profile_reduced_blocks(cfg: ModelConfig, *, batch: int = 2,
             "reduced_cfg": red, "batch": batch, "seq": seq}
 
 
+def stage_latencies_from_registry(registry) -> Dict[str, float]:
+    """Measured seconds-per-row per stage from the live obs registry
+    (``stage_batch_seconds`` sum over ``stage_samples_total``) — the
+    profiled half of the hybrid cost model for elastic stage sizing.
+    Stages that have not completed a batch yet are absent; callers fall
+    back to the analytic estimate for those."""
+    hist = registry.get("stage_batch_seconds")
+    samples = registry.get("stage_samples_total")
+    out: Dict[str, float] = {}
+    if hist is None or samples is None:
+        return out
+    for row in hist.snapshot():
+        stage = row["labels"].get("stage")
+        if not stage:
+            continue
+        n = samples.value(stage=stage)
+        if n > 0 and row["sum"] > 0:
+            out[stage] = row["sum"] / n
+    return out
+
+
 def make_profile_fn(cfg: ModelConfig, w, hw: HW = HW()):
     """Returns a ``profile_fn(plan) -> overrides`` for
     ``plan_resources(..., profile_fn=...)``: measures the reduced blocks

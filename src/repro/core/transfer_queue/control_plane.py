@@ -83,10 +83,11 @@ class TransferQueueController:
             "tq_ready_depth",
             "rows currently ready and unconsumed (queue depth)").labels(
             task=task)
+        # labelled per decision with the policy *actually used* (a
+        # token_balance controller packs fifo until token hints arrive)
         self._m_sched = m.counter(
             "tq_sched_decisions_total",
-            "micro-batches packed per task/policy").labels(
-            task=task, policy=policy)
+            "micro-batches packed per task/policy")
         self._m_wait = m.counter(
             "tq_blocked_wait_seconds_total",
             "seconds consumers spent blocked on this task")
@@ -163,15 +164,17 @@ class TransferQueueController:
             # §3.5 instrumentation: only the blocked interval counts as
             # wait — scheduling/packing below is controller work time
             self._account_wait(time.monotonic() - t0, consumer)
-            if self.policy == "fifo":
-                chosen = list(itertools.islice(self._avail, batch_size))
-            else:
+            use_tb = self.policy == "token_balance" and bool(self._token_len)
+            if use_tb:
                 chosen = self._schedule(self._available(), batch_size,
                                         consumer)
+            else:
+                chosen = list(itertools.islice(self._avail, batch_size))
             for i in chosen:
                 self._consumed[i] = True
                 self._avail.pop(i, None)
-            self._m_sched.inc()
+            self._m_sched.inc(task=self.task,
+                              policy="token_balance" if use_tb else "fifo")
             self._m_rows_consumed.inc(len(chosen))
             self._m_depth.set(len(self._avail))
             return BatchMeta(chosen, list(self.columns), consumer)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import itertools
 import threading
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 from repro.core.transfer_queue.control_plane import (BatchMeta,
                                                      TransferQueueController)
@@ -20,17 +20,26 @@ from repro.core.transfer_queue.data_plane import DataPlane
 
 class TransferQueue:
     def __init__(self, capacity: int, tasks: Dict[str, Sequence[str]],
-                 num_storage_units: int = 2, policy: str = "fifo",
+                 num_storage_units: int = 2,
+                 policy: Union[str, Dict[str, str]] = "fifo",
                  metrics=None):
-        """tasks: {task_name: required columns}. ``metrics`` is an
-        optional :class:`repro.core.obs.MetricsRegistry` shared by every
+        """tasks: {task_name: required columns}. ``policy`` is one name
+        for every controller, or {task: name} overriding per consumer
+        stage (missing tasks use the ``"default"`` entry, else fifo) —
+        token balancing applies to *any* stage, not just the trainer.
+        ``metrics`` is an optional
+        :class:`repro.core.obs.MetricsRegistry` shared by every
         controller (defaults to the process-global registry)."""
         self.capacity = capacity
         self.data_plane = DataPlane(num_storage_units)
         self.controllers: Dict[str, TransferQueueController] = {}
         for task, cols in tasks.items():
-            c = TransferQueueController(task, cols, capacity, policy=policy,
-                                        metrics=metrics)
+            if isinstance(policy, dict):
+                task_policy = policy.get(task, policy.get("default", "fifo"))
+            else:
+                task_policy = policy
+            c = TransferQueueController(task, cols, capacity,
+                                        policy=task_policy, metrics=metrics)
             self.controllers[task] = c
             self.data_plane.register_controller(c)
         self._idx_counter = itertools.count()

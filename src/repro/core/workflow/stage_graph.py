@@ -64,11 +64,14 @@ class WorkflowConfig:
     staleness: int = 1
     staggered: bool = False           # sub-step async (Fig. 8d)
     num_storage_units: int = 2
-    policy: str = "fifo"
+    policy: Any = "fifo"           # str, or {task: str} for per-stage policy
     channel_bandwidth_gbps: float = 0.0
     extra_columns: tuple = ()      # e.g. ("ref_logprob",) for GRPO+KL
     metrics_jsonl: str = ""        # JSONL metrics-snapshot path ("" = off)
     metrics_interval_s: float = 0.25
+    auto_size_workers: bool = False  # planner-size stages with num_workers=0
+    elastic_interval_s: float = 0.0  # >0: live rebalance monitor cadence (s)
+    max_stage_workers: int = 8       # auto-size / elastic pool cap
 
     @property
     def samples_per_step(self) -> int:
@@ -279,8 +282,6 @@ class StageRunner:
             num_storage_units=cfg.num_storage_units, policy=cfg.policy,
             metrics=self.registry)
 
-        self.n_gen_workers = (self.gen_stage.num_workers
-                              or cfg.num_rollout_workers)
         driver_engine = self.engines[self.driver_stage.engine] \
             if self.driver_stage.engine else None
         init_weights = getattr(driver_engine, "params", None)
@@ -289,6 +290,43 @@ class StageRunner:
                 f"drives_steps stage {self.driver_stage.name!r} must name "
                 f"an engine exposing .params — the step driver publishes "
                 f"weights to the generate stage at every step boundary")
+
+        # ---- planner-driven worker sizing (§4.3 meets §3.3) ------------
+        # every stage carries a desired pool size: hand-tuned num_workers
+        # wins; specs left at 0 take the cfg default or — with
+        # auto_size_workers — the cost-model sizing from
+        # core/planner/elastic. Train-side stages stay single-threaded
+        # (step semantics and engine gradient-accumulation state).
+        self._pool_lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        self._spawn_seq = 0
+        self._active: Dict[str, int] = {n: 0 for n in graph.stages}
+        self._desired: Dict[str, int] = {}
+        for name, spec in graph.stages.items():
+            if spec.drives_steps or spec.kind in ("train", "train_stream"):
+                self._desired[name] = 1
+            elif spec.kind == "generate":
+                self._desired[name] = (spec.num_workers
+                                       or cfg.num_rollout_workers)
+            else:
+                self._desired[name] = spec.num_workers or 1
+        self.stage_costs = None
+        if cfg.auto_size_workers:
+            from repro.core.planner.elastic import (auto_size_workers,
+                                                    estimate_stage_costs)
+            self.stage_costs = estimate_stage_costs(
+                graph, self.engines,
+                seq_len=int(getattr(driver_engine, "seq_len", 32)),
+                group_size=cfg.group_size)
+            sized = auto_size_workers(graph, self.stage_costs,
+                                      max_workers=cfg.max_stage_workers)
+            for name, spec in graph.stages.items():
+                if spec.num_workers == 0 and not spec.drives_steps \
+                        and spec.kind in ("generate", "transform"):
+                    self._desired[name] = sized[name]
+        self.n_gen_workers = self._desired[self.gen_stage.name]
+        self._elastic = None
+
         self.channel = WeightChannel(cfg.channel_bandwidth_gbps,
                                      metrics=self.registry)
         self.sender = WeightSender(
@@ -326,6 +364,8 @@ class StageRunner:
         self._h_staleness = m.histogram(
             "train_staleness",
             "observed weight-version staleness at the train consumer")
+        self._g_workers = m.gauge(
+            "stage_workers", "live worker threads per stage (elastic)")
 
     def _fail(self, msg: str) -> None:
         """Record a fatal stage error and stop the run; run() re-raises."""
@@ -347,6 +387,70 @@ class StageRunner:
     @property
     def _source_col(self) -> str:
         return self.graph.source_columns[0]
+
+    # ------------------------------------------------------------------ #
+    # elastic worker pools (planner-driven sizing + live rebalance)       #
+    # ------------------------------------------------------------------ #
+
+    def _pool_shrunk(self, name: str) -> bool:
+        """Elastic shrink: the first worker to observe its pool above the
+        desired size exits and returns its slot."""
+        with self._pool_lock:
+            if self._active[name] > self._desired[name]:
+                self._active[name] -= 1
+                self._g_workers.labels(stage=name).set(self._active[name])
+                return True
+        return False
+
+    def _spawn_worker(self, spec: StageSpec) -> None:
+        """Start one more worker thread for a stage (caller holds
+        _pool_lock and has already counted the slot in _active)."""
+        sid = self._spawn_seq
+        self._spawn_seq = sid + 1
+        if spec.kind == "generate":
+            # a receiver constructed mid-run starts from the live trainer
+            # params and catches up to the newest published version on its
+            # first maybe_swap()
+            recv = WeightReceiver(self.channel, self._driver_engine.params,
+                                  version=self.trainer_version,
+                                  metrics=self.registry)
+            self.receivers.append(recv)
+            t = threading.Thread(target=self._guard,
+                                 args=(self._generate_worker, sid, recv),
+                                 daemon=True)
+        else:
+            t = threading.Thread(target=self._guard,
+                                 args=(self._transform_worker, spec, sid),
+                                 daemon=True)
+        self._threads.append(t)
+        t.start()
+
+    def _resize_stage(self, name: str, delta: int) -> bool:
+        """ElasticController apply hook: grow/shrink a stage's pool.
+        Train-side stages and (under staggered update) the generate stage
+        are fixed-size."""
+        spec = self.graph.stages.get(name)
+        if spec is None or spec.drives_steps \
+                or spec.kind not in ("generate", "transform"):
+            return False
+        if spec.kind == "generate" and self.cfg.staggered:
+            return False            # staggered update group is fixed-size
+        with self._pool_lock:
+            new = self._desired[name] + delta
+            if not 1 <= new <= self.cfg.max_stage_workers:
+                return False
+            self._desired[name] = new
+            if delta > 0:
+                if self._stop.is_set():
+                    return False
+                self._active[name] += 1
+                self._g_workers.labels(stage=name).set(self._active[name])
+                self._spawn_worker(spec)
+        return True
+
+    def _elastic_loop(self) -> None:
+        while not self._stop.wait(self.cfg.elastic_interval_s):
+            self._elastic.step()
 
     # ------------------------------------------------------------------ #
     # generate stage (weight-receiving producer)                          #
@@ -380,10 +484,9 @@ class StageRunner:
             self.tq.put_batch(idxs, "version", [version] * len(rows))
         return True
 
-    def _generate_worker(self, widx: int) -> None:
+    def _generate_worker(self, widx: int, recv: WeightReceiver) -> None:
         spec = self.gen_stage
         name = f"rollout-{widx}"
-        recv = self.receivers[widx]
         rng = np.random.default_rng(1234 + widx)
         fn = self._stage_fn(spec)
         bs = spec.batch_size or self.cfg.rollout_batch
@@ -400,6 +503,8 @@ class StageRunner:
         except (TypeError, ValueError):
             supports_emit = False
         while not self._stop.is_set():
+            if self._pool_shrunk(spec.name):
+                return
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
                                 allow_partial=True)
             if batch is None:
@@ -467,6 +572,8 @@ class StageRunner:
         c_samples = self._c_samples.labels(stage=spec.name)
         c_stalls = self._c_stalls.labels(stage=spec.name)
         while True:
+            if self._pool_shrunk(spec.name):
+                return
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
                                 allow_partial=True)
             if batch is None:
@@ -612,32 +719,53 @@ class StageRunner:
         t0 = time.monotonic()
         feeder = threading.Thread(target=self._guard,
                                   args=(self._feed_prompts,), daemon=True)
-        workers = [threading.Thread(target=self._guard,
-                                    args=(self._generate_worker, i),
-                                    daemon=True)
-                   for i in range(self.n_gen_workers)]
-        for spec in self.transform_stages:
-            for w in range(spec.num_workers or 1):
-                workers.append(threading.Thread(
+        with self._pool_lock:
+            for i in range(self.n_gen_workers):
+                self._threads.append(threading.Thread(
                     target=self._guard,
-                    args=(self._transform_worker, spec, w), daemon=True))
-        for spec in self.stream_train_stages:
-            workers.append(threading.Thread(
-                target=self._guard, args=(self._stream_train_worker, spec),
-                daemon=True))
+                    args=(self._generate_worker, i, self.receivers[i]),
+                    daemon=True))
+            for spec in self.transform_stages:
+                for w in range(self._desired[spec.name]):
+                    self._threads.append(threading.Thread(
+                        target=self._guard,
+                        args=(self._transform_worker, spec, w), daemon=True))
+            for spec in self.stream_train_stages:
+                self._threads.append(threading.Thread(
+                    target=self._guard,
+                    args=(self._stream_train_worker, spec), daemon=True))
+            # mid-run spawns pick worker ids above every initial index so
+            # consumer names never collide within a stage
+            self._spawn_seq = max(self._desired.values(), default=1)
+            for name, n in self._desired.items():
+                self._active[name] = n
+                self._g_workers.labels(stage=name).set(n)
+        monitor = None
+        if self.cfg.elastic_interval_s > 0:
+            from repro.core.planner.elastic import ElasticController
+            self._elastic = ElasticController(
+                self.graph, self.registry, self._desired, self._resize_stage,
+                max_workers=self.cfg.max_stage_workers)
+            monitor = threading.Thread(target=self._elastic_loop, daemon=True)
         trainer = threading.Thread(target=self._guard, args=(self._driver,),
                                    daemon=True)
         try:
             feeder.start()
-            for w in workers:
+            for w in self._threads:
                 w.start()
+            if monitor is not None:
+                monitor.start()
             trainer.start()
             trainer.join()
             self._stop.set()
             self.tq.close()
-            for w in workers:
+            with self._pool_lock:
+                threads = list(self._threads)
+            for w in threads:
                 w.join(timeout=5.0)
             feeder.join(timeout=5.0)
+            if monitor is not None:
+                monitor.join(timeout=5.0)
         finally:
             if sampler is not None:
                 sampler.stop()

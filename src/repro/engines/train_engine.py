@@ -154,15 +154,18 @@ class JaxTrainEngine(_AccumulatingEngine):
     def __init__(self, cfg, init_params, *, rl=None,
                  opt: Optional[OptimizerConfig] = None,
                  global_batch: int = 16, seq_len: int = 32,
-                 algorithm: str = "grpo"):
+                 algorithm: str = "grpo", use_pallas: bool = False):
         super().__init__(cfg, init_params, opt=opt,
                          global_batch=global_batch, seq_len=seq_len)
         self.algorithm = algorithm
+        # use_pallas routes the whole actor update through the fused
+        # kernels/fused_rl_loss hot path (only consulted when no rl
+        # config is passed — an explicit config carries its own flag)
         if algorithm == "ppo":
-            self.rl = rl or PPOConfig()
+            self.rl = rl or PPOConfig(use_pallas_logprob=use_pallas)
             self._grad_fn = _ppo_actor_grad_microbatch
         else:
-            self.rl = rl or GRPOConfig()
+            self.rl = rl or GRPOConfig(use_pallas_logprob=use_pallas)
             self._grad_fn = _grad_microbatch
 
     def _grad(self, jb):

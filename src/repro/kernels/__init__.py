@@ -8,4 +8,8 @@ ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle):
   rglru_scan       — RG-LRU linear recurrence (recurrentgemma)
   mamba_scan       — mamba-1 selective scan (falcon-mamba)
   grpo_logprob     — fused token-logprob+entropy over 100k-256k vocab
+  fused_rl_loss    — the whole GRPO/PPO actor hot path (logprob + entropy
+                     + k3 KL + clipped surrogate) in one vocab pass, with
+                     a hand-written VJP that recomputes softmax blockwise
+                     instead of saving a (B·S, V) residual
 """

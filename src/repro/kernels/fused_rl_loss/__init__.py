@@ -1,0 +1,4 @@
+from repro.kernels.fused_rl_loss.ops import fused_rl_loss
+from repro.kernels.fused_rl_loss.ref import fused_rl_loss_ref
+
+__all__ = ["fused_rl_loss", "fused_rl_loss_ref"]

@@ -1,0 +1,155 @@
+"""Public fused RL-loss op with a hand-written VJP.
+
+``fused_rl_loss`` computes the per-token actor hot path
+
+  lp, ent, kl, pl, ratio = f(logits, targets, old_lp, ref_lp, adv)
+
+in ONE streamed pass over the (N, V) logits forward, and one more pass
+backward — recomputing per-block softmax from the saved (N,) statistics
+(lse, x̄) instead of materializing a log-softmax residual, which is what
+autodiff through the unfused composition does.
+
+Both routes share the same ``jax.custom_vjp``:
+
+  * ``use_pallas=True``  — the Pallas kernels in ``fused_rl_loss.py``
+    (interpret mode off-TPU), pad-and-mask for any (N, V).
+  * ``use_pallas=False`` — an equivalent one-pass jnp forward/backward,
+    so even the pure-XLA route skips the autodiff residual.
+
+Chain-rule scalars (shared by both backward routes); with
+``d = ref − lp``, ``sel`` = unclipped branch active, ``in_clip`` =
+ratio inside the clip interval:
+
+  ∂pl/∂lp    = −where(sel, ratio·A, ratio·A·in_clip)
+  ∂kl/∂lp    = 1 − exp(d)
+  ∂ratio/∂lp = ratio
+
+  dlp   = g_pl·∂pl/∂lp + g_kl·(1 − exp(d)) + g_ratio·ratio + g_lp
+  dx_j  = dlp·δ_jt − p_j (dlp + g_ent·(x_j − x̄))
+  g_old = −g_pl·∂pl/∂lp − g_ratio·ratio
+  g_ref = g_kl·(exp(d) − 1)
+  g_adv = −g_pl·where(sel, ratio, clip(ratio))
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_rl_loss.fused_rl_loss import (
+    fused_rl_loss_bwd_kernel, fused_rl_loss_fwd_kernel)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _epilogue(lp, ent, old, ref, adv, clip_eps):
+    ratio = jnp.exp(lp - old)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pl_tok = -jnp.minimum(unclipped, clipped)
+    d = ref - lp
+    kl = jnp.exp(d) - d - 1.0
+    return lp, ent, kl, pl_tok, ratio
+
+
+def _fwd_jnp(logits, targets, old, ref, adv, clip_eps):
+    """One-pass jnp forward: lse/entropy/target pick without log_softmax."""
+    x = logits.astype(jnp.float32)
+    m = x.max(-1)
+    s = jnp.exp(x - m[:, None])
+    l = s.sum(-1)
+    lse = m + jnp.log(l)
+    g = jnp.take_along_axis(x, targets[:, None], axis=-1)[:, 0]
+    lp = g - lse
+    ent = lse - (s * x).sum(-1) / l
+    return _epilogue(lp, ent, old.astype(jnp.float32),
+                     ref.astype(jnp.float32), adv.astype(jnp.float32),
+                     clip_eps), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fused(logits, targets, old_lp, ref_lp, adv,
+           clip_eps, use_pallas, block_n, block_v):
+    if use_pallas:
+        lp, ent, kl, pl_tok, ratio, _lse = fused_rl_loss_fwd_kernel(
+            logits, targets, old_lp, ref_lp, adv, clip_eps=clip_eps,
+            block_n=block_n, block_v=block_v, interpret=_interpret())
+        return lp, ent, kl, pl_tok, ratio
+    outs, _lse = _fwd_jnp(logits, targets, old_lp, ref_lp, adv, clip_eps)
+    return outs
+
+
+def _fused_fwd(logits, targets, old_lp, ref_lp, adv,
+               clip_eps, use_pallas, block_n, block_v):
+    if use_pallas:
+        lp, ent, kl, pl_tok, ratio, lse = fused_rl_loss_fwd_kernel(
+            logits, targets, old_lp, ref_lp, adv, clip_eps=clip_eps,
+            block_n=block_n, block_v=block_v, interpret=_interpret())
+        outs = (lp, ent, kl, pl_tok, ratio)
+    else:
+        outs, lse = _fwd_jnp(logits, targets, old_lp, ref_lp, adv, clip_eps)
+        lp, ent = outs[0], outs[1]
+    res = (logits, targets, old_lp, ref_lp, adv, lp, ent, lse)
+    return outs, res
+
+
+def _fused_bwd(clip_eps, use_pallas, block_n, block_v, res, cts):
+    logits, targets, old_lp, ref_lp, adv, lp, ent, lse = res
+    g_lp, g_ent, g_kl, g_pl, g_ratio = cts
+
+    old = old_lp.astype(jnp.float32)
+    ref = ref_lp.astype(jnp.float32)
+    a = adv.astype(jnp.float32)
+
+    ratio = jnp.exp(lp - old)
+    clip_r = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    unclipped = ratio * a
+    # jnp.minimum ties pick the first operand — keep the same convention
+    sel = unclipped <= clip_r * a
+    in_clip = (ratio >= 1.0 - clip_eps) & (ratio <= 1.0 + clip_eps)
+    dpl_dlp = -jnp.where(sel, unclipped,
+                         unclipped * in_clip.astype(jnp.float32))
+    expd = jnp.exp(ref - lp)
+
+    dlp = (g_pl * dpl_dlp + g_kl * (1.0 - expd)
+           + g_ratio * ratio + g_lp)
+    xbar = lse - ent
+
+    if use_pallas:
+        dx = fused_rl_loss_bwd_kernel(
+            logits, targets, lse, xbar, dlp, g_ent,
+            block_n=block_n, block_v=block_v, interpret=_interpret())
+    else:
+        x = logits.astype(jnp.float32)
+        p = jnp.exp(x - lse[:, None])                 # softmax, recomputed
+        dx = -p * (dlp[:, None] + g_ent[:, None] * (x - xbar[:, None]))
+        dx = dx.at[jnp.arange(x.shape[0]), targets].add(dlp)
+        dx = dx.astype(logits.dtype)
+
+    g_old = (-g_pl * dpl_dlp - g_ratio * ratio).astype(old_lp.dtype)
+    g_ref = (g_kl * (expd - 1.0)).astype(ref_lp.dtype)
+    g_adv = (-g_pl * jnp.where(sel, ratio, clip_r)).astype(adv.dtype)
+    g_tgt = np.zeros(targets.shape, jax.dtypes.float0)
+    return dx, g_tgt, g_old, g_ref, g_adv
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_rl_loss(logits, targets, old_logprob, ref_logprob, advantage, *,
+                  clip_eps=0.2, use_pallas=False, block_n=256,
+                  block_v=2048):
+    """(..., V) logits + (...) per-token vectors ->
+    (logprob, entropy, kl, policy_loss, ratio), each shaped like targets,
+    float32. Differentiable w.r.t. logits/old/ref/advantage."""
+    shape = targets.shape
+    V = logits.shape[-1]
+    outs = _fused(logits.reshape(-1, V), targets.reshape(-1).astype(jnp.int32),
+                  old_logprob.reshape(-1), ref_logprob.reshape(-1),
+                  advantage.reshape(-1), float(clip_eps), bool(use_pallas),
+                  int(block_n), int(block_v))
+    return tuple(o.reshape(shape) for o in outs)

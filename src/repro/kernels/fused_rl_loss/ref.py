@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused RL loss — autodiff-able, materializes
+the full (N, V) log-softmax. This is what the fused kernel must match
+(values and, via ``jax.grad``, gradients)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_rl_loss_ref(logits, targets, old_logprob, ref_logprob, advantage,
+                      *, clip_eps=0.2):
+    """logits (N, V), the rest (N,) -> (lp, ent, kl, pl, ratio), each (N,)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lp = jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    ent = -(jnp.exp(logp) * logp).sum(-1)
+
+    old = old_logprob.astype(jnp.float32)
+    ref = ref_logprob.astype(jnp.float32)
+    adv = advantage.astype(jnp.float32)
+
+    ratio = jnp.exp(lp - old)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pl_tok = -jnp.minimum(unclipped, clipped)
+    d = ref - lp
+    kl = jnp.exp(d) - d - 1.0
+    return lp, ent, kl, pl_tok, ratio

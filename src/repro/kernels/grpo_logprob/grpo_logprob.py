@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.pad_utils import (NEG_INF, pad_logits, pad_rows,
+                                     pick_blocks)
 
 
 def _kernel(logits_ref, target_ref, lp_ref, ent_ref, m_ref, l_ref, t_ref,
@@ -66,33 +67,31 @@ def _kernel(logits_ref, target_ref, lp_ref, ent_ref, m_ref, l_ref, t_ref,
                                              "interpret"))
 def grpo_logprob_kernel(logits, targets, *, block_n=256, block_v=2048,
                         interpret=False):
-    """logits: (N, V); targets: (N,) int32 -> (logprob (N,), entropy (N,))."""
-    N, V = logits.shape
-    block_n = min(block_n, N)
-    block_v = min(block_v, V)
-    assert N % block_n == 0 and V % block_v == 0
-    nn, nv = N // block_n, V // block_v
+    """logits: (N, V); targets: (N,) int32 -> (logprob (N,), entropy (N,)).
 
-    kernel = functools.partial(_kernel, block_v=block_v, num_v_blocks=nv)
+    Any (N, V) works: rows pad with zeros (tail sliced off the outputs),
+    vocab pads with NEG_INF (vanishes inside the online LSE).
+    """
+    N, V = logits.shape
+    bn, bv, n_pad, v_pad = pick_blocks(N, V, block_n, block_v)
+    nn, nv = n_pad // bn, v_pad // bv
+
+    lg = pad_logits(logits, n_pad, v_pad)
+    tg = pad_rows(targets, n_pad)
+
+    kernel = functools.partial(_kernel, block_v=bv, num_v_blocks=nv)
+    row = pl.BlockSpec((bn,), lambda i, j: (i,))
     lp, ent = pl.pallas_call(
         kernel,
         grid=(nn, nv),
         in_specs=[
-            pl.BlockSpec((block_n, block_v), lambda i, j: (i, j)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((bn, bv), lambda i, j: (i, j)),
+            row,
         ],
-        out_specs=[
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-        ],
-        out_shape=[jax.ShapeDtypeStruct((N,), jnp.float32),
-                   jax.ShapeDtypeStruct((N,), jnp.float32)],
-        scratch_shapes=[
-            pltpu.VMEM((block_n,), jnp.float32),
-            pltpu.VMEM((block_n,), jnp.float32),
-            pltpu.VMEM((block_n,), jnp.float32),
-            pltpu.VMEM((block_n,), jnp.float32),
-        ],
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32)] * 4,
         interpret=interpret,
-    )(logits, targets)
-    return lp, ent
+    )(lg, tg)
+    return lp[:N], ent[:N]

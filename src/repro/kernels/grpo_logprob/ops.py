@@ -2,7 +2,6 @@
 import jax
 
 from repro.kernels.grpo_logprob.grpo_logprob import grpo_logprob_kernel
-from repro.kernels.grpo_logprob.ref import grpo_logprob_ref
 
 
 def grpo_logprob(logits, targets, *, block_n=256, block_v=2048):
@@ -10,11 +9,6 @@ def grpo_logprob(logits, targets, *, block_n=256, block_v=2048):
     V = logits.shape[-1]
     lg = logits.reshape(-1, V)
     tg = targets.reshape(-1)
-    N = lg.shape[0]
-    bn, bv = min(block_n, N), min(block_v, V)
-    if N % bn or V % bv:
-        lp, ent = grpo_logprob_ref(lg, tg)
-    else:
-        lp, ent = grpo_logprob_kernel(lg, tg, block_n=bn, block_v=bv,
-                                      interpret=jax.default_backend() != "tpu")
+    lp, ent = grpo_logprob_kernel(lg, tg, block_n=block_n, block_v=block_v,
+                                  interpret=jax.default_backend() != "tpu")
     return lp.reshape(shape), ent.reshape(shape)

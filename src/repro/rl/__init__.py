@@ -1,8 +1,8 @@
 from repro.rl.advantage import gae, grpo_advantages
 from repro.rl.grpo import (GRPOConfig, grpo_dataflow, grpo_grad_step,
                            grpo_loss_fn, grpo_train_step)
-from repro.rl.loss import (clipped_policy_loss, kl_penalty, token_logprobs,
-                           value_loss)
+from repro.rl.loss import (clipped_policy_loss, fused_actor_loss, kl_penalty,
+                           token_logprobs, value_loss)
 from repro.rl.ppo import (PPOConfig, critic_forward, gae_stage,
                           init_critic_params, ppo_actor_loss_fn,
                           ppo_critic_loss_fn, ppo_dataflow, ppo_loss_fn,
@@ -16,4 +16,4 @@ __all__ = ["grpo_advantages", "gae", "GRPOConfig", "grpo_train_step",
            "ppo_critic_loss_fn", "ppo_dataflow", "gae_stage",
            "init_critic_params", "critic_forward", "math_reward",
            "generate", "token_logprobs", "clipped_policy_loss",
-           "kl_penalty", "value_loss"]
+           "fused_actor_loss", "kl_penalty", "value_loss"]

@@ -19,12 +19,11 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.workflow.stage_graph import (StageGraph, StageSpec,
                                              register_dataflow)
 from repro.models import forward
-from repro.rl.loss import clipped_policy_loss, kl_penalty, token_logprobs
+from repro.rl.loss import fused_actor_loss
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_state import TrainState
 
@@ -57,22 +56,18 @@ def grpo_loss_fn(params, cfg, batch, rl: GRPOConfig,
     # last S-1 text positions (same as pure LM after slicing the prefix)
     S = tokens.shape[1]
     logits = logits[:, -S:, :]
-    logp, ent = token_logprobs(logits[:, :-1], tokens[:, 1:],
-                               use_pallas=rl.use_pallas_logprob)
     mask = batch["response_mask"][:, 1:]
-    old_lp = batch["old_logprob"][:, 1:]
 
-    pl_loss, stats = clipped_policy_loss(logp, old_lp, batch["advantage"],
-                                         mask, clip_eps=rl.clip_eps)
-    loss = pl_loss + aux
-    if rl.kl_coef and ref_logprob is not None:
-        loss = loss + rl.kl_coef * kl_penalty(logp, ref_logprob[:, 1:], mask)
-    if rl.entropy_coef:
-        loss = loss - rl.entropy_coef * (ent * mask).sum() / \
-            jnp.maximum(mask.sum(), 1.0)
-    metrics = {"loss": loss, "policy_loss": pl_loss,
-               "entropy": (ent * mask).sum() / jnp.maximum(mask.sum(), 1.0),
-               **stats}
+    # one fused pass over the (B, S, V) logits: logprob + entropy + KL +
+    # clipped surrogate, hand-written VJP (kernels/fused_rl_loss)
+    actor_loss, stats = fused_actor_loss(
+        logits[:, :-1], tokens[:, 1:], batch["old_logprob"][:, 1:],
+        batch["advantage"], mask,
+        ref_logprob=ref_logprob[:, 1:] if ref_logprob is not None else None,
+        clip_eps=rl.clip_eps, kl_coef=rl.kl_coef,
+        entropy_coef=rl.entropy_coef, use_pallas=rl.use_pallas_logprob)
+    loss = actor_loss + aux
+    metrics = {"loss": loss, **stats}
     return loss, metrics
 
 

@@ -1,8 +1,15 @@
-"""Policy-gradient losses (GRPO / PPO) with the fused logprob kernel.
+"""Policy-gradient losses (GRPO / PPO) with the fused RL hot-path kernel.
 
-All losses are masked to response tokens; logits-side computation goes
-through ``token_logprobs`` which can use the Pallas ``grpo_logprob``
-kernel (the memory-bound hotspot over 100k-256k vocab logits).
+All losses are masked to response tokens. The actor update goes through
+``fused_actor_loss``, which routes the entire per-token hot path —
+logprob + entropy + k3 KL + clipped surrogate — through
+``kernels/fused_rl_loss``: ONE streamed pass over the (B, S, V) logits
+forward and one backward (hand-written VJP recomputing softmax from
+per-token statistics), instead of the three-op composition below that
+materializes log-softmax plus its autodiff residual. The unfused
+primitives (``token_logprobs``/``clipped_policy_loss``/``kl_penalty``)
+remain for inference-side logprobs, tests and benchmarks; ``value_loss``
+stays separate for the critic.
 """
 from __future__ import annotations
 
@@ -40,6 +47,40 @@ def clipped_policy_loss(logp_new, logp_old, advantages, mask, *,
     clip_frac = ((jnp.abs(ratio - 1) > clip_eps) * mask).sum() / denom
     return loss, {"ratio_mean": (ratio * mask).sum() / denom,
                   "clip_frac": clip_frac}
+
+
+def fused_actor_loss(logits, targets, old_logprob, advantages, mask, *,
+                     ref_logprob=None, clip_eps: float = 0.2,
+                     kl_coef: float = 0.0, entropy_coef: float = 0.0,
+                     use_pallas: bool = False):
+    """The GRPO/PPO actor objective in one fused pass over the logits.
+
+    logits (B, S, V) predicting targets (B, S); old_logprob (B, S);
+    advantages (B,) per sample (GRPO) or (B, S) per token (PPO+GAE);
+    mask (B, S). Returns ``(loss, stats)`` with the same masked-mean
+    semantics and stat keys as the unfused composition.
+    """
+    from repro.kernels.fused_rl_loss.ops import fused_rl_loss
+    if advantages.ndim == 1:
+        advantages = jnp.broadcast_to(advantages[:, None], targets.shape)
+    use_kl = bool(kl_coef) and ref_logprob is not None
+    ref = ref_logprob if use_kl else jnp.zeros_like(old_logprob)
+    lp, ent, kl, pl_tok, ratio = fused_rl_loss(
+        logits, targets, old_logprob, ref, advantages,
+        clip_eps=clip_eps, use_pallas=use_pallas)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    pl_loss = (pl_tok * mask).sum() / denom
+    ent_mean = (ent * mask).sum() / denom
+    loss = pl_loss
+    if use_kl:
+        loss = loss + kl_coef * (kl * mask).sum() / denom
+    if entropy_coef:
+        loss = loss - entropy_coef * ent_mean
+    stats = {"policy_loss": pl_loss, "entropy": ent_mean,
+             "ratio_mean": (ratio * mask).sum() / denom,
+             "clip_frac": ((jnp.abs(ratio - 1) > clip_eps)
+                           * mask).sum() / denom}
+    return loss, stats
 
 
 def kl_penalty(logp_new, logp_ref, mask):

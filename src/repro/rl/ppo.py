@@ -26,8 +26,7 @@ from repro.core.workflow.stage_graph import (StageGraph, StageSpec,
 from repro.models import forward, init_params
 from repro.models.layers import dense, init_dense, normal_init
 from repro.rl.advantage import gae
-from repro.rl.loss import (clipped_policy_loss, kl_penalty, token_logprobs,
-                           value_loss)
+from repro.rl.loss import fused_actor_loss, value_loss
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_state import TrainState
 
@@ -63,26 +62,21 @@ def ppo_loss_fn(actor_params, critic_params, cfg, batch, rl: PPOConfig):
     returns (B,S), old_values (B,S), optional ref_logprob."""
     tokens = batch["tokens"]
     logits, aux = forward(actor_params, cfg, {"tokens": tokens})
-    logp, ent = token_logprobs(logits[:, :-1], tokens[:, 1:],
-                               use_pallas=rl.use_pallas_logprob)
     mask = batch["response_mask"][:, 1:]
-    pl_loss, stats = clipped_policy_loss(
-        logp, batch["old_logprob"][:, 1:], batch["advantage"][:, 1:], mask,
-        clip_eps=rl.clip_eps)
+    ref_lp = batch.get("ref_logprob")
+    actor_loss, stats = fused_actor_loss(
+        logits[:, :-1], tokens[:, 1:], batch["old_logprob"][:, 1:],
+        batch["advantage"][:, 1:], mask,
+        ref_logprob=ref_lp[:, 1:] if ref_lp is not None else None,
+        clip_eps=rl.clip_eps, kl_coef=rl.kl_coef,
+        entropy_coef=rl.entropy_coef, use_pallas=rl.use_pallas_logprob)
 
     values = critic_forward(critic_params, cfg, tokens)[:, :-1]
     vf = value_loss(values, batch["returns"][:, 1:],
                     batch["old_values"][:, 1:], mask,
                     clip_eps=rl.value_clip_eps)
-    loss = pl_loss + rl.vf_coef * vf + aux
-    if rl.kl_coef and "ref_logprob" in batch:
-        loss = loss + rl.kl_coef * kl_penalty(
-            logp, batch["ref_logprob"][:, 1:], mask)
-    if rl.entropy_coef:
-        loss = loss - rl.entropy_coef * (ent * mask).sum() / \
-            jnp.maximum(mask.sum(), 1.0)
-    return loss, {"loss": loss, "policy_loss": pl_loss, "value_loss": vf,
-                  **stats}
+    loss = actor_loss + rl.vf_coef * vf + aux
+    return loss, {"loss": loss, "value_loss": vf, **stats}
 
 
 def ppo_actor_loss_fn(params, cfg, batch, rl: PPOConfig):
@@ -91,22 +85,16 @@ def ppo_actor_loss_fn(params, cfg, batch, rl: PPOConfig):
     The value term lives in the separate ``critic_update`` stage."""
     tokens = batch["tokens"]
     logits, aux = forward(params, cfg, {"tokens": tokens})
-    logp, ent = token_logprobs(logits[:, :-1], tokens[:, 1:],
-                               use_pallas=rl.use_pallas_logprob)
     mask = batch["response_mask"][:, 1:]
-    pl_loss, stats = clipped_policy_loss(
-        logp, batch["old_logprob"][:, 1:], batch["advantage"][:, 1:], mask,
-        clip_eps=rl.clip_eps)
-    loss = pl_loss + aux
-    if rl.kl_coef and batch.get("ref_logprob") is not None:
-        loss = loss + rl.kl_coef * kl_penalty(
-            logp, batch["ref_logprob"][:, 1:], mask)
-    if rl.entropy_coef:
-        loss = loss - rl.entropy_coef * (ent * mask).sum() / \
-            jnp.maximum(mask.sum(), 1.0)
-    metrics = {"loss": loss, "policy_loss": pl_loss,
-               "entropy": (ent * mask).sum() / jnp.maximum(mask.sum(), 1.0),
-               **stats}
+    ref_lp = batch.get("ref_logprob")
+    actor_loss, stats = fused_actor_loss(
+        logits[:, :-1], tokens[:, 1:], batch["old_logprob"][:, 1:],
+        batch["advantage"][:, 1:], mask,
+        ref_logprob=ref_lp[:, 1:] if ref_lp is not None else None,
+        clip_eps=rl.clip_eps, kl_coef=rl.kl_coef,
+        entropy_coef=rl.entropy_coef, use_pallas=rl.use_pallas_logprob)
+    loss = actor_loss + aux
+    metrics = {"loss": loss, **stats}
     return loss, metrics
 
 

@@ -118,3 +118,112 @@ def test_profiling_hybrid_path_end_to_end():
     assert pf.raw["reduced_train_s"] > 0
     pr = plan_resources(cfg, 128, w, profile_fn=pf, profile_top_k=2)
     assert pr.throughput > 0
+
+
+# ---------------------------------------------------------------------- #
+# elastic stage sizing: analytic stage costs -> worker counts -> live      #
+# rebalance from obs starvation signals                                    #
+# ---------------------------------------------------------------------- #
+
+def _grpo_graph_and_engines():
+    from types import SimpleNamespace
+
+    from repro.core.workflow import build_dataflow
+    cfg = get_config("qwen2_5_7b")
+    g = build_dataflow("grpo", kl_coef=0.05)
+    eng = SimpleNamespace(cfg=cfg, group_size=8, max_new_tokens=512)
+    return g, {"rollout": eng, "actor": eng}
+
+
+def test_estimate_stage_costs_sources_and_ordering():
+    from repro.core.planner import estimate_stage_costs
+    g, engines = _grpo_graph_and_engines()
+    costs = estimate_stage_costs(g, engines, seq_len=1024, group_size=8,
+                                 profiled={"reward": 0.5})
+    assert set(costs) == set(g.stages)
+    assert costs["reward"].source == "profiled"
+    assert costs["reward"].seconds_per_row == 0.5
+    assert costs["generate"].source == "analytic"
+    # decode-dominated generation costs more per row than one forward pass
+    assert costs["generate"].seconds_per_row \
+        > costs["ref_inference"].seconds_per_row
+    # engine verbs without a forward pass are priced at the cheap default
+    costs2 = estimate_stage_costs(g, engines, seq_len=1024, group_size=8)
+    assert costs2["reward"].seconds_per_row < 1e-3
+
+
+def test_auto_size_workers_matches_driver_rate():
+    from repro.core.planner import auto_size_workers, estimate_stage_costs
+    g, engines = _grpo_graph_and_engines()
+    costs = estimate_stage_costs(g, engines, seq_len=1024, group_size=8)
+    sizes = auto_size_workers(g, costs, max_workers=8)
+    assert sizes["actor_update"] == 1          # step driver single-threaded
+    assert all(1 <= n <= 8 for n in sizes.values())
+    # generation is the expensive stage: it must get the most workers
+    assert sizes["generate"] > 1
+    assert sizes["generate"] == max(sizes.values())
+
+
+def test_auto_sized_pipeline_beats_starved_hand_tuning():
+    """Acceptance: planner-sized counts beat a deliberately starved
+    hand-tuned config (one worker everywhere) in the pipeline simulator."""
+    from repro.core.planner import (auto_size_workers, estimate_stage_costs,
+                                    simulate_stage_pipeline)
+    g, engines = _grpo_graph_and_engines()
+    costs = estimate_stage_costs(g, engines, seq_len=1024, group_size=8)
+    sized = auto_size_workers(g, costs, max_workers=8)
+    starved = {n: 1 for n in costs}
+    t_sized = simulate_stage_pipeline(costs, sized, n_rows=1024)
+    t_starved = simulate_stage_pipeline(costs, starved, n_rows=1024)
+    assert t_sized < t_starved
+
+
+def test_elastic_controller_grows_producers_then_shrinks():
+    from repro.core.obs import MetricsRegistry
+    from repro.core.planner import ElasticController
+    from repro.core.workflow import StageGraph, StageSpec
+
+    g = StageGraph(source_columns=("prompt",))
+    g.add(StageSpec("generate", inputs=("prompt",), outputs=("item",),
+                    kind="generate"))
+    g.add(StageSpec("enrich", inputs=("item",), outputs=("score",)))
+    g.add(StageSpec("actor_update", inputs=("item", "score"), kind="train",
+                    drives_steps=True))
+    g.validate()
+
+    m = MetricsRegistry()
+    stalls = m.counter("stage_stalls_total", "")
+    waits = m.counter("tq_blocked_wait_seconds_total", "")
+    m.histogram("stage_batch_seconds", "")
+    desired = {"generate": 1, "enrich": 1, "actor_update": 1}
+    calls = []
+
+    def apply(name, delta):
+        calls.append((name, delta))
+        desired[name] += delta
+        return True
+
+    ec = ElasticController(g, m, desired, apply, patience=2, max_workers=4)
+    ec.step()                                   # baseline interval: no-op
+    assert calls == []
+
+    # the blocking driver starves: blocked-wait grows past the threshold
+    # for `patience` consecutive intervals -> both input producers grow
+    for _ in range(2):
+        waits.inc(0.2, task="actor_update", consumer="trainer")
+        ec.step()
+    assert ("generate", 1) in calls and ("enrich", 1) in calls
+    reb = m.counter("stage_rebalance_total", "")
+    assert reb.value(stage="generate", action="grow") == 1
+
+    # a polling stage starves while its producer is at the cap -> the
+    # starved (idle) pool itself shrinks back toward one worker
+    calls.clear()
+    desired["generate"] = 4
+    for _ in range(2):
+        stalls.inc(5, stage="enrich")
+        ec.step()
+    assert calls == [("enrich", -1)]
+    assert reb.value(stage="enrich", action="shrink") == 1
+    # the driver is never resized
+    assert all(name != "actor_update" for name, _ in calls)

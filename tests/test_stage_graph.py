@@ -11,6 +11,7 @@ import pytest
 
 from conftest import tiny_cfg
 from repro.api import AsyncFlowService, Trainer, TrainerConfig
+from repro.core.obs import MetricsRegistry
 from repro.core.workflow import (AsyncRLRunner, StageGraph, StageRunner,
                                  StageSpec, WorkflowConfig, build_dataflow)
 from repro.data import PromptDataset
@@ -120,6 +121,55 @@ def test_stage_runner_toy_dataflow_streams_per_stage():
     enrich_ev = [e for e in r.log.events() if e.kind == "enrich"]
     gen_ev = [e for e in r.log.events() if e.kind == "generate"]
     assert min(e.start for e in enrich_ev) < max(e.end for e in gen_ev)
+
+
+def test_stage_runner_auto_sizes_zero_worker_stages():
+    """auto_size_workers=True planner-sizes every stage left at
+    num_workers=0 and the run still trains the exact sample count."""
+    cfg = WorkflowConfig(mode="streaming", num_rollout_workers=2,
+                         rollout_batch=2, train_micro_batch=4,
+                         prompts_per_step=4, group_size=2, num_steps=3,
+                         auto_size_workers=True, max_stage_workers=4)
+    runner = StageRunner(
+        cfg, _toy_graph(),
+        engines={"trainer": SimpleNamespace(params={"w": 0})},
+        prompt_stream=lambda s: [1, 2, 3, 4], metrics=MetricsRegistry())
+    assert set(runner.stage_costs) == {"generate", "enrich", "actor_update"}
+    assert runner._desired["actor_update"] == 1
+    assert all(1 <= n <= 4 for n in runner._desired.values())
+    r = runner.run()
+    assert r.samples_trained == 3 * 8
+    snap = {tuple(sorted(row["labels"].items())): row["value"]
+            for row in runner.registry.get("stage_workers").snapshot()}
+    assert snap[(("stage", "actor_update"),)] == 1
+
+
+def test_stage_runner_elastic_grows_starved_generate_pool():
+    """Live rebalance: a single slow generate worker starves the driver,
+    the elastic monitor grows the pool mid-run, and the run completes."""
+    def slow_gen(batch, *, params, rng, version=0, **kw):
+        time.sleep(0.05)
+        return {"rows": [dict(item=x, token_len=1)
+                         for x in batch["prompt"] for _ in range(2)]}
+
+    g = _toy_graph()
+    g.stages["generate"] = dataclasses.replace(g.stages["generate"],
+                                               fn=slow_gen)
+    cfg = WorkflowConfig(mode="streaming", num_rollout_workers=1,
+                         rollout_batch=1, train_micro_batch=4,
+                         prompts_per_step=4, group_size=2, num_steps=10,
+                         elastic_interval_s=0.1, max_stage_workers=4)
+    runner = StageRunner(
+        cfg, g, engines={"trainer": SimpleNamespace(params={"w": 0})},
+        prompt_stream=lambda s: [1, 2, 3, 4], metrics=MetricsRegistry())
+    r = runner.run()
+    assert r.samples_trained == 10 * 8
+    reb = runner.registry.get("stage_rebalance_total")
+    assert reb is not None
+    # the starved driver made the monitor grow the generate pool mid-run
+    # (it may shrink again once the prompt stream drains at the tail)
+    assert reb.value(stage="generate", action="grow") >= 1
+    assert runner.registry.get("stage_workers").value(stage="generate") >= 1
 
 
 def test_stage_runner_requires_generate_and_driver():

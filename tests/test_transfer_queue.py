@@ -133,6 +133,37 @@ def test_token_balance_policy():
     assert abs(ta - tb) <= 0.4 * total
 
 
+def test_per_task_policy_and_decision_labels():
+    """policy may be {task: name}: every consumer stage can token-balance
+    independently, and tq_sched_decisions_total records the policy each
+    micro-batch was *actually* packed with (token_balance falls back to
+    fifo until token hints exist)."""
+    from repro.core.obs import MetricsRegistry
+    m = MetricsRegistry()
+    tq = TransferQueue(capacity=8, tasks={"bal": ["x"], "plain": ["x"]},
+                       policy={"bal": "token_balance"}, metrics=m)
+    assert tq.controllers["bal"].policy == "token_balance"
+    assert tq.controllers["plain"].policy == "fifo"
+
+    # before any token hints: token_balance controller packs fifo
+    idxs = tq.next_indices(4)
+    tq.put_batch(idxs, "x", list(range(4)))
+    tq.get("bal", 2)
+    sched = m.get("tq_sched_decisions_total")
+    assert sched.value(task="bal", policy="fifo") == 1
+
+    # with hints the non-legacy stage balances tokens across consumers
+    idxs2 = tq.next_indices(4)
+    lens = [1, 100, 2, 90]
+    tq.put_batch(idxs2, "x", list(range(4)), token_lens=lens)
+    a = tq.get("bal", 3, consumer="dpA")
+    assert sched.value(task="bal", policy="token_balance") == 1
+    tq.get("plain", 4, consumer="dpB")
+    assert sched.value(task="plain", policy="fifo") == 1
+    tok = dict(zip(idxs2, lens))
+    assert any(tok.get(i, 0) >= 90 for i in a["indices"])  # long/short mix
+
+
 def test_blocking_consumer_wakes_on_write():
     tq = TransferQueue(capacity=2, tasks={"t": ["x"]})
     out = {}
