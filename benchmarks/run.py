@@ -8,6 +8,8 @@ and tracebacks go to stderr when recording a trajectory). Mapping:
   stability           — Fig. 12 (async vs sync reward)
   transfer_queue      — §3.5 (concurrency micro-benchmarks)
   stage_graph         — §4.1 (fused vs. staged pipeline bubbles)
+  chaos               — fault injection (0/5/15% crash rates: graceful
+                        degradation with exactly-once recovery)
   rollout             — §3.3 (fixed-batch vs continuous-batching rollout)
   kernels             — kernel oracle timings + kernel-vs-oracle error
   roofline            — deliverable (g): dry-run roofline summary
@@ -69,6 +71,7 @@ def main(argv=None) -> None:
         ("stability", stability.run),
         ("transfer_queue", transfer_queue_bench.run),
         ("stage_graph", stage_graph_bench.run),
+        ("chaos", stage_graph_bench.run_chaos),
         ("rollout", rollout_bench.run),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),

@@ -14,6 +14,18 @@ pipeline moves reference inference and reward scoring off the rollout
 workers' critical path onto their own streaming workers, which shows up
 as a much shorter wall time (and correspondingly idle rollout workers —
 generation alone no longer bounds the step).
+
+``run_chaos`` is the fault-injection arm: the same staged GRPO workload
+under deterministic crash injection at 0% / 5% / 15% per generate call.
+Crashed replicas are fenced, their leased prompts requeue to the front of
+the ready set, and the supervisor respawns replacements — the arm proves
+graceful degradation with ZERO lost or duplicated experience rows at
+every rate (crashes fire before the generate verb consumes compute, so
+recovery costs only the respawn and throughput stays near the fault-free
+baseline). Standalone:
+
+  PYTHONPATH=src python -m benchmarks.stage_graph_bench \\
+      --chaos --smoke --json BENCH_ci_faults.json
 """
 from __future__ import annotations
 
@@ -106,6 +118,137 @@ def run(render: bool = False) -> list[dict]:
     return rows
 
 
+def run_chaos(render: bool = False, smoke: bool = False) -> list[dict]:
+    """Fault-injection arm: staged GRPO under 0% / 5% / 15% crash rates.
+
+    Each arm runs in a scoped metrics registry so the row-accounting
+    (produced vs trained vs requeued) is per-rate. Emits, per rate:
+    throughput, replica restarts, rows requeued, and rows lost/duplicated
+    (both must be 0 — recovery is exactly-once)."""
+    import jax  # noqa: F401  (warm the backend before timing)
+
+    from repro.api import Trainer, TrainerConfig
+    from repro.configs import get_config
+    from repro.core.obs import scoped
+    from repro.core.supervision import FaultConfig
+    from repro.data.tokenizer import ByteTokenizer
+
+    w = _workload()
+    cfg = dataclasses.replace(
+        get_config("qwen2_5_7b").reduced(), num_layers=2, d_model=64,
+        d_ff=128, num_heads=2, num_kv_heads=2, head_dim=32,
+        vocab_size=ByteTokenizer.vocab_size)
+    rates = (0.0, 0.05) if smoke else (0.0, 0.05, 0.15)
+    num_steps = 2 if smoke else w["num_steps"]
+    expected = num_steps * w["prompts_per_step"] * w["group_size"]
+    rows = []
+
+    def _make_cfg(p, steps):
+        return TrainerConfig(
+            mode=w["mode"], num_steps=steps,
+            prompts_per_step=w["prompts_per_step"],
+            group_size=w["group_size"],
+            rollout_workers=w["rollout_workers"],
+            rollout_batch=w["rollout_batch"],
+            train_micro_batch=w["train_micro_batch"],
+            max_new_tokens=w["max_new_tokens"], seq_len=w["seq_len"],
+            kl_coef=w["kl_coef"], seed=0,
+            heartbeat_timeout_s=30.0,
+            max_replica_restarts=64,
+            # seed 8 draws a crash on each initial worker's first
+            # calls even at 5%, so every rate > 0 exercises recovery
+            faults=FaultConfig(crash_p=p, seed=8,
+                               stages=("generate",)) if p else None)
+
+    # untimed full-length warmup so the first rate doesn't absorb JIT
+    # compilation (a 1-step warmup leaves ~15% skew on the first arm)
+    with scoped():
+        Trainer(_make_cfg(0.0, num_steps), model_cfg=cfg).fit()
+    for p in rates:
+        with scoped() as reg:
+            r = Trainer(_make_cfg(p, num_steps), model_cfg=cfg).fit()
+            snap = reg.snapshot()
+
+        def _total(name):
+            return sum(v["value"]
+                       for v in snap.get(name, {}).get("values", []))
+
+        def _labeled(name, **want):
+            return sum(v["value"]
+                       for v in snap.get(name, {}).get("values", [])
+                       if all(v.get("labels", {}).get(k) == lv
+                              for k, lv in want.items()))
+
+        produced = _labeled("stage_samples_total", stage="generate")
+        restarts = _total("replica_restarts_total")
+        requeued = _total("rows_requeued_total")
+        tag = f"{int(p * 100)}pct"
+        rows.append(dict(name=f"stage_graph_chaos_{tag}_throughput",
+                         us_per_call=r.wall_time_s * 1e6,
+                         derived=round(r.throughput, 2)))
+        rows.append(dict(name=f"stage_graph_chaos_{tag}_restarts",
+                         us_per_call=r.wall_time_s * 1e6,
+                         derived=int(restarts)))
+        rows.append(dict(name=f"stage_graph_chaos_{tag}_rows_requeued",
+                         us_per_call=r.wall_time_s * 1e6,
+                         derived=int(requeued)))
+        # exactly-once accounting: every expected row trained, and the
+        # generate stage never produced a duplicate
+        rows.append(dict(name=f"stage_graph_chaos_{tag}_rows_lost",
+                         us_per_call=r.wall_time_s * 1e6,
+                         derived=int(expected - r.samples_trained)))
+        rows.append(dict(name=f"stage_graph_chaos_{tag}_rows_duplicated",
+                         us_per_call=r.wall_time_s * 1e6,
+                         derived=int(produced - expected)))
+        if render:
+            print(f"--- crash_p={p}: wall {r.wall_time_s:.2f}s · "
+                  f"{r.samples_trained}/{expected} rows · "
+                  f"{int(restarts)} restarts · "
+                  f"{int(requeued)} requeued ---")
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+    import time
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection arm only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced steps / rates for CI")
+    ap.add_argument("--json", dest="json_path", default="",
+                    help="write rows as a bench-trajectory JSON file")
+    args = ap.parse_args(argv)
+    rows = run_chaos(render=True, smoke=args.smoke) if args.chaos \
+        else run(render=True)
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    if args.json_path:
+        doc = {"schema": "asyncflow-bench-trajectory/v1",
+               "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                          time.gmtime()),
+               "suites": {"chaos" if args.chaos else "stage_graph":
+                          {"rows": rows, "error": None}}}
+        with open(args.json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, default=str)
+            fh.write("\n")
+    # fault-injection acceptance: recovery must be exactly-once
+    bad = [r for r in rows
+           if r["name"].endswith(("rows_lost", "rows_duplicated"))
+           and r["derived"] != 0]
+    if bad:
+        for r in bad:
+            print(f"FAIL {r['name']} = {r['derived']}")
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
+    import sys
+
+    if len(sys.argv) > 1:
+        sys.exit(main())
     for row in run(render=True):
         print(row)

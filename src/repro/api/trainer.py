@@ -67,6 +67,13 @@ class TrainerConfig:
     auto_size_workers: bool = False    # planner-size stages left at 0
     elastic_interval_s: float = 0.0    # >0: live rebalance cadence (s)
     max_stage_workers: int = 8         # auto-size / elastic pool cap
+    # -- supervision & fault tolerance --------------------------------
+    supervise: bool = True             # generator-fleet crash recovery
+    max_replica_restarts: int = 8      # fleet-wide respawn budget
+    heartbeat_timeout_s: float = 10.0  # hung-replica detection threshold
+    max_stage_retries: int = 2         # retryable-error attempts on top
+    retry_backoff_s: float = 0.05      # base exponential backoff
+    faults: Optional[Any] = None       # FaultConfig: chaos injection
 
 
 class Trainer:
@@ -142,7 +149,12 @@ class Trainer:
             metrics_interval_s=t.metrics_interval_s,
             auto_size_workers=t.auto_size_workers,
             elastic_interval_s=t.elastic_interval_s,
-            max_stage_workers=t.max_stage_workers)
+            max_stage_workers=t.max_stage_workers,
+            supervise=t.supervise,
+            max_replica_restarts=t.max_replica_restarts,
+            heartbeat_timeout_s=t.heartbeat_timeout_s,
+            max_stage_retries=t.max_stage_retries,
+            retry_backoff_s=t.retry_backoff_s, faults=t.faults)
         graph = build_dataflow(t.algorithm, kl_coef=t.kl_coef,
                                gamma=t.gamma, lam=t.gae_lambda)
         runner = StageRunner(

@@ -108,6 +108,9 @@ def render_report(telemetry: dict) -> str:
     rollout = _rollout_summary(telemetry.get("metrics", {}))
     if rollout:
         lines += ["", rollout]
+    superv = _supervision_summary(telemetry.get("metrics", {}))
+    if superv:
+        lines += ["", superv]
     return "\n".join(lines)
 
 
@@ -135,3 +138,24 @@ def _rollout_summary(metrics: dict) -> str:
     return (f"rollout: occupancy {occ[-1]['value']:.2f} · "
             f"{int(adm)} admissions · {int(pages)} kv pages · {split} "
             f"({tot:.2f}s)")
+
+
+def _supervision_summary(metrics: dict) -> str:
+    """One-line fault-tolerance summary: replica restarts, in-place stage
+    retries, rows requeued after consumer deaths, injected faults."""
+    restarts = sum(v["value"] for v in
+                   _metric_values(metrics, "replica_restarts_total"))
+    retries = sum(v["value"] for v in
+                  _metric_values(metrics, "stage_retries_total"))
+    requeued = sum(v["value"] for v in
+                   _metric_values(metrics, "rows_requeued_total"))
+    injected = sum(v["value"] for v in
+                   _metric_values(metrics, "faults_injected_total"))
+    if not (restarts or retries or requeued or injected):
+        return ""
+    line = (f"supervision: {int(restarts)} replica restarts · "
+            f"{int(retries)} stage retries · "
+            f"{int(requeued)} rows requeued")
+    if injected:
+        line += f" · {int(injected)} faults injected"
+    return line

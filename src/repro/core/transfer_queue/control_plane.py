@@ -23,11 +23,15 @@ from repro.core.obs import MetricsRegistry, get_registry
 
 @dataclass
 class BatchMeta:
-    """Metadata handed to a DP group: which rows to fetch from where."""
+    """Metadata handed to a DP group: which rows to fetch from where.
+    ``lease_id`` is set when the rows were handed out under a lease —
+    the consumer must :meth:`TransferQueueController.ack` it after
+    processing, or the supervisor requeues the rows on its death."""
     indices: List[int]
     columns: List[str]
     consumer: str = ""
     issued_at: float = field(default_factory=time.monotonic)
+    lease_id: Optional[int] = None
 
 
 class TransferQueueController:
@@ -63,6 +67,10 @@ class TransferQueueController:
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._closed = False
+        # lease table (fault tolerance): rows handed out under a lease
+        # stay consumed until acked; a dead consumer's leases requeue
+        self._lease_seq = itertools.count(1)
+        self._leases: Dict[int, dict] = {}
         # instrumentation
         self.n_requests = 0
         self.total_wait_s = 0.0
@@ -91,6 +99,10 @@ class TransferQueueController:
         self._m_wait = m.counter(
             "tq_blocked_wait_seconds_total",
             "seconds consumers spent blocked on this task")
+        self._m_requeued = m.counter(
+            "rows_requeued_total",
+            "leased rows returned to ready after a consumer death"
+        ).labels(task=task)
 
     # -- metadata notification (called by storage units) ---------------------
 
@@ -133,11 +145,15 @@ class TransferQueueController:
 
     def request(self, batch_size: int, consumer: str = "dp0",
                 timeout: Optional[float] = None,
-                allow_partial: bool = False) -> Optional[BatchMeta]:
+                allow_partial: bool = False,
+                lease: bool = False) -> Optional[BatchMeta]:
         """Block until ``batch_size`` rows are ready, then consume them.
 
         Returns None if the queue is closed (or timed out) with nothing
         available; a partial batch if closed/``allow_partial`` with fewer.
+        With ``lease=True`` the rows are tracked under a lease id until
+        :meth:`ack` — if the consumer dies first, :meth:`requeue_lease`
+        returns them to ready (at the front, preserving FIFO order).
         """
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
@@ -177,7 +193,13 @@ class TransferQueueController:
                               policy="token_balance" if use_tb else "fifo")
             self._m_rows_consumed.inc(len(chosen))
             self._m_depth.set(len(self._avail))
-            return BatchMeta(chosen, list(self.columns), consumer)
+            lease_id = None
+            if lease:
+                lease_id = next(self._lease_seq)
+                self._leases[lease_id] = {"rows": list(chosen),
+                                          "consumer": consumer}
+            return BatchMeta(chosen, list(self.columns), consumer,
+                             lease_id=lease_id)
 
     def _account_wait(self, blocked_s: float, consumer: str) -> None:
         self.total_wait_s += blocked_s
@@ -208,6 +230,53 @@ class TransferQueueController:
             return chosen
         return avail[:n]  # fifo
 
+    # -- leases (fault tolerance) ---------------------------------------------
+
+    def ack(self, lease_id: Optional[int]) -> None:
+        """Finalize a lease: the rows were fully processed."""
+        if lease_id is None:
+            return
+        with self._lock:
+            self._leases.pop(lease_id, None)
+
+    def requeue_lease(self, lease_id: Optional[int]) -> int:
+        """Return a dead consumer's leased rows to ready. Idempotent —
+        an already-acked or already-requeued lease is a no-op. Restored
+        rows go to the FRONT of the ready set in their original order,
+        so recovery preserves the FIFO schedule (uid/index assignment
+        downstream stays deterministic under a fixed seed)."""
+        if lease_id is None:
+            return 0
+        with self._cv:
+            rec = self._leases.pop(lease_id, None)
+            if rec is None:
+                return 0
+            rows = [i for i in rec["rows"] if self._consumed[i]]
+            front: Dict[int, None] = {}
+            for i in rows:
+                self._consumed[i] = False
+                if self._n_ready_cols[i] == len(self.columns):
+                    front[i] = None
+            for i in self._avail:
+                front.setdefault(i, None)
+            self._avail = front
+            self._m_requeued.inc(len(rows))
+            self._m_depth.set(len(self._avail))
+            self._cv.notify_all()
+            return len(rows)
+
+    def requeue_consumer(self, consumer: str) -> int:
+        """Requeue every outstanding lease held by ``consumer``."""
+        with self._lock:
+            ids = [lid for lid, rec in self._leases.items()
+                   if rec["consumer"] == consumer]
+        return sum(self.requeue_lease(lid) for lid in ids)
+
+    def outstanding_leases(self, consumer: Optional[str] = None) -> int:
+        with self._lock:
+            return sum(1 for rec in self._leases.values()
+                       if consumer is None or rec["consumer"] == consumer)
+
     # -- lifecycle -------------------------------------------------------------
 
     def close(self) -> None:
@@ -226,6 +295,7 @@ class TransferQueueController:
             self._avail.clear()
             self._token_len.clear()
             self._tokens_served.clear()
+            self._leases.clear()
             self._closed = False
             self._cv.notify_all()
 

@@ -71,19 +71,35 @@ class TransferQueue:
     # -- consumers -----------------------------------------------------------
 
     def get(self, task: str, batch_size: int, consumer: str = "dp0",
-            timeout: Optional[float] = None, allow_partial: bool = False
-            ) -> Optional[Dict[str, Any]]:
+            timeout: Optional[float] = None, allow_partial: bool = False,
+            lease: bool = False) -> Optional[Dict[str, Any]]:
         """Blocking read of a micro-batch for ``task``.
 
-        Returns {"indices": [...], <column>: [...]} or None when closed."""
+        Returns {"indices": [...], <column>: [...]} or None when closed.
+        With ``lease=True`` the batch carries a ``"lease"`` id the
+        consumer must :meth:`ack` once processed; an unacked lease can be
+        requeued if the consumer dies (fault tolerance)."""
         ctrl = self.controllers[task]
         meta = ctrl.request(batch_size, consumer, timeout=timeout,
-                            allow_partial=allow_partial)
+                            allow_partial=allow_partial, lease=lease)
         if meta is None or not meta.indices:
             return None
         data = self.data_plane.get(meta.indices, meta.columns)
         data["indices"] = meta.indices
+        if lease:
+            data["lease"] = meta.lease_id
         return data
+
+    def ack(self, task: str, lease_id: Optional[int]) -> None:
+        self.controllers[task].ack(lease_id)
+
+    def requeue(self, task: str, lease_id: Optional[int]) -> int:
+        """Return one unacked lease's rows to ready (idempotent)."""
+        return self.controllers[task].requeue_lease(lease_id)
+
+    def requeue_consumer(self, task: str, consumer: str) -> int:
+        """Return every unacked lease of a dead consumer to ready."""
+        return self.controllers[task].requeue_consumer(consumer)
 
     def dataloader(self, task: str, batch_size: int, consumer: str = "dp0",
                    allow_partial: bool = True) -> "StreamingDataLoader":

@@ -1,15 +1,21 @@
+from repro.core.supervision import (FaultConfig, FaultInjector, ReplicaCrash,
+                                    ReplicaSupervisor, RetryableError,
+                                    WeightSyncTimeout)
 from repro.core.workflow.async_engine import AsyncRLRunner
 from repro.core.workflow.events import Event, EventLog
 from repro.core.workflow.stage_graph import (StageGraph, StageRunner,
                                              StageSpec, WorkflowConfig,
                                              WorkflowResult, build_dataflow,
                                              register_dataflow)
-from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
+from repro.core.workflow.weight_sync import (BroadcastWeightChannel,
+                                             StaggeredUpdateGroup,
                                              VersionedWeights, WeightChannel,
                                              WeightReceiver, WeightSender)
 
-__all__ = ["AsyncRLRunner", "WorkflowConfig", "WorkflowResult", "EventLog",
-           "Event", "WeightChannel", "WeightSender", "WeightReceiver",
-           "StaggeredUpdateGroup", "VersionedWeights", "StageGraph",
-           "StageSpec", "StageRunner", "register_dataflow",
-           "build_dataflow"]
+__all__ = ["AsyncRLRunner", "BroadcastWeightChannel", "Event", "EventLog",
+           "FaultConfig", "FaultInjector", "ReplicaCrash",
+           "ReplicaSupervisor", "RetryableError", "StageGraph", "StageSpec",
+           "StageRunner", "StaggeredUpdateGroup", "VersionedWeights",
+           "WeightChannel", "WeightReceiver", "WeightSender",
+           "WeightSyncTimeout", "WorkflowConfig", "WorkflowResult",
+           "build_dataflow", "register_dataflow"]

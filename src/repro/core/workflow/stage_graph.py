@@ -45,11 +45,14 @@ import numpy as np
 
 from repro.core.obs import (MetricsRegistry, MetricsSampler, build_telemetry,
                             get_registry)
+from repro.core.supervision import (FaultConfig, FaultInjector, ReplicaCrash,
+                                    ReplicaSupervisor, RetryPolicy,
+                                    call_with_retry)
 from repro.core.transfer_queue import TransferQueue
 from repro.core.workflow.events import EventLog
-from repro.core.workflow.weight_sync import (StaggeredUpdateGroup,
-                                             WeightChannel, WeightReceiver,
-                                             WeightSender)
+from repro.core.workflow.weight_sync import (BroadcastWeightChannel,
+                                             StaggeredUpdateGroup,
+                                             WeightReceiver, WeightSender)
 
 
 @dataclass
@@ -72,6 +75,13 @@ class WorkflowConfig:
     auto_size_workers: bool = False  # planner-size stages with num_workers=0
     elastic_interval_s: float = 0.0  # >0: live rebalance monitor cadence (s)
     max_stage_workers: int = 8       # auto-size / elastic pool cap
+    # -- supervision & fault tolerance (generator fleet) -----------------
+    supervise: bool = True           # heartbeats + crash respawn + requeue
+    max_replica_restarts: int = 8    # fleet-wide respawn budget
+    heartbeat_timeout_s: float = 10.0  # stale replica declared dead (hung)
+    max_stage_retries: int = 2       # extra attempts for RetryableError
+    retry_backoff_s: float = 0.05    # base of exp backoff (+ determ. jitter)
+    faults: Optional[FaultConfig] = None  # deterministic chaos injection
 
     @property
     def samples_per_step(self) -> int:
@@ -327,15 +337,18 @@ class StageRunner:
         self.n_gen_workers = self._desired[self.gen_stage.name]
         self._elastic = None
 
-        self.channel = WeightChannel(cfg.channel_bandwidth_gbps,
-                                     metrics=self.registry)
+        # one-to-many broadcast: the trainer stages ONE host snapshot per
+        # step and every replica swaps from the same buffer, acking the
+        # version it runs — bytes published are independent of fleet size
+        self.channel = BroadcastWeightChannel(cfg.channel_bandwidth_gbps,
+                                              metrics=self.registry)
         self.sender = WeightSender(
             self.channel, mode="async" if cfg.mode == "async" else "sync",
             metrics=self.registry)
         self.receivers = [
             WeightReceiver(self.channel, init_weights, version=0,
-                           metrics=self.registry)
-            for _ in range(self.n_gen_workers)]
+                           metrics=self.registry, replica_id=i)
+            for i in range(self.n_gen_workers)]
         self.stagger = StaggeredUpdateGroup(self.receivers) \
             if cfg.staggered else None
         self._driver_engine = driver_engine
@@ -348,6 +361,26 @@ class StageRunner:
         self.aux_metrics: Dict[str, List[dict]] = {}
         self.samples_trained = 0
         self._error: Optional[str] = None
+        self._error_origin: Optional[Tuple[str, Any]] = None
+        self._fail_lock = threading.Lock()
+
+        # ---- supervision & fault tolerance -----------------------------
+        faults = cfg.faults
+        self._faults = FaultInjector(faults, metrics=self.registry) \
+            if faults is not None and faults.active else None
+        self._retry_policy = RetryPolicy(
+            max_attempts=cfg.max_stage_retries + 1,
+            base_s=cfg.retry_backoff_s,
+            seed=faults.seed if faults is not None else 0)
+        self._supervisor: Optional[ReplicaSupervisor] = None
+        if cfg.supervise:
+            self._supervisor = ReplicaSupervisor(
+                self._respawn_replica, requeue=self._requeue_replica,
+                heartbeat_timeout_s=cfg.heartbeat_timeout_s,
+                max_restarts=cfg.max_replica_restarts,
+                on_exhausted=lambda e: self._fail(
+                    self.gen_stage.name, "supervisor", e),
+                stage=self.gen_stage.name, metrics=self.registry)
 
         # per-stage worker instrumentation (shared families, stage labels)
         m = self.registry
@@ -366,11 +399,19 @@ class StageRunner:
             "observed weight-version staleness at the train consumer")
         self._g_workers = m.gauge(
             "stage_workers", "live worker threads per stage (elastic)")
+        self._c_retries = m.counter(
+            "stage_retries_total",
+            "retryable stage failures retried in place (backoff)")
 
-    def _fail(self, msg: str) -> None:
-        """Record a fatal stage error and stop the run; run() re-raises."""
-        if self._error is None:
-            self._error = msg
+    def _fail(self, stage: str, worker: Any, err: Any) -> None:
+        """Record a fatal stage error and stop the run; run() re-raises.
+        The FIRST failure wins when workers race (later ones are
+        symptoms of the stop, not causes) and the message names the
+        originating stage and worker index."""
+        with self._fail_lock:
+            if self._error is None:
+                self._error = f"stage {stage!r} worker {worker}: {err!r}"
+                self._error_origin = (stage, worker)
         self._stop.set()
         with self._step_done:
             self._step_done.notify_all()
@@ -387,6 +428,56 @@ class StageRunner:
     @property
     def _source_col(self) -> str:
         return self.graph.source_columns[0]
+
+    def _call_stage(self, stage: str, widx: int, thunk: Callable) -> Any:
+        """Run one stage verb under the error taxonomy: deterministic
+        fault injection first (chaos arm), then bounded retries with
+        exponential backoff + deterministic jitter for RetryableError.
+        ReplicaCrash and fatal errors propagate to _guard."""
+        def _attempt():
+            if self._faults is not None:
+                self._faults.check(stage, widx)
+            return thunk()
+
+        return call_with_retry(
+            _attempt, policy=self._retry_policy, key=f"{stage}:{widx}",
+            on_retry=lambda a, e: self._c_retries.inc(stage=stage))
+
+    # ------------------------------------------------------------------ #
+    # replica supervision (generator fleet)                               #
+    # ------------------------------------------------------------------ #
+
+    def _requeue_replica(self, dead) -> int:
+        """Supervisor requeue hook: return a dead replica's in-flight rows
+        to the FRONT of the ready set (idempotent — a crashing replica
+        requeues its own lease before reporting death) and release its
+        broadcast subscription and pool slot."""
+        n = self.tq.requeue(self.gen_stage.name, dead.current_lease)
+        n += self.tq.requeue_consumer(self.gen_stage.name,
+                                      f"rollout-{dead.rid}")
+        dead.current_lease = None
+        self.channel.unsubscribe(dead.rid)
+        with self._pool_lock:
+            if self._active[self.gen_stage.name] > 0:
+                self._active[self.gen_stage.name] -= 1
+                self._g_workers.labels(stage=self.gen_stage.name).set(
+                    self._active[self.gen_stage.name])
+        return n
+
+    def _respawn_replica(self, dead) -> bool:
+        """Supervisor respawn hook: start a replacement generate worker
+        with a fresh receiver subscribed at the live trainer version."""
+        if self._stop.is_set():
+            return False
+        spec = self.gen_stage
+        with self._pool_lock:
+            if self._active[spec.name] >= self._desired[spec.name]:
+                return False        # elastic shrink absorbed the slot
+            self._active[spec.name] += 1
+            self._g_workers.labels(stage=spec.name).set(
+                self._active[spec.name])
+            self._spawn_worker(spec)
+        return True
 
     # ------------------------------------------------------------------ #
     # elastic worker pools (planner-driven sizing + live rebalance)       #
@@ -410,18 +501,25 @@ class StageRunner:
         if spec.kind == "generate":
             # a receiver constructed mid-run starts from the live trainer
             # params and catches up to the newest published version on its
-            # first maybe_swap()
+            # first maybe_swap(); the broadcast channel tracks its acks
+            # under a fresh replica id
             recv = WeightReceiver(self.channel, self._driver_engine.params,
                                   version=self.trainer_version,
-                                  metrics=self.registry)
+                                  metrics=self.registry, replica_id=sid)
             self.receivers.append(recv)
-            t = threading.Thread(target=self._guard,
-                                 args=(self._generate_worker, sid, recv),
-                                 daemon=True)
+            handle = self._supervisor.register(sid, None) \
+                if self._supervisor is not None else None
+            t = threading.Thread(
+                target=self._guard,
+                args=(self._generate_worker, sid, recv, handle),
+                kwargs=dict(stage=spec.name, worker=sid, handle=handle),
+                daemon=True)
+            if handle is not None:
+                handle.thread = t
         else:
-            t = threading.Thread(target=self._guard,
-                                 args=(self._transform_worker, spec, sid),
-                                 daemon=True)
+            t = threading.Thread(
+                target=self._guard, args=(self._transform_worker, spec, sid),
+                kwargs=dict(stage=spec.name, worker=sid), daemon=True)
         self._threads.append(t)
         t.start()
 
@@ -469,10 +567,10 @@ class StageRunner:
             # (controllers ignore out-of-range notifications) — fail
             # loudly instead: the graph's fan-out exceeds what the
             # cfg-derived capacity accounts for
-            self._fail(
-                f"stage {spec.name!r} overflowed queue capacity "
-                f"{self.tq.capacity} (row {idxs[-1]}): generate "
-                f"fan-out exceeds cfg.group_size accounting")
+            self._fail(spec.name, "producer", RuntimeError(
+                f"overflowed queue capacity {self.tq.capacity} "
+                f"(row {idxs[-1]}): generate fan-out exceeds "
+                f"cfg.group_size accounting"))
             return False
         token_lens = [r.get("token_len", 0) for r in rows]
         c_samples.inc(len(rows))
@@ -484,7 +582,8 @@ class StageRunner:
             self.tq.put_batch(idxs, "version", [version] * len(rows))
         return True
 
-    def _generate_worker(self, widx: int, recv: WeightReceiver) -> None:
+    def _generate_worker(self, widx: int, recv: WeightReceiver,
+                         handle=None) -> None:
         spec = self.gen_stage
         name = f"rollout-{widx}"
         rng = np.random.default_rng(1234 + widx)
@@ -497,21 +596,35 @@ class StageRunner:
         c_stalls = self._c_stalls.labels(stage=spec.name)
         # per-sample handoff: a verb that accepts ``emit`` streams each
         # finished row into the queue the moment its sequence completes
-        # (continuous batching), instead of returning them as one batch
+        # (continuous batching), instead of returning them as one batch;
+        # a verb that accepts ``heartbeat`` keeps the supervisor fed
+        # during long rollouts so healthy replicas are never fenced
         try:
-            supports_emit = "emit" in inspect.signature(fn).parameters
+            sig = inspect.signature(fn).parameters
+            supports_emit = "emit" in sig
+            supports_heartbeat = "heartbeat" in sig
         except (TypeError, ValueError):
-            supports_emit = False
+            supports_emit = supports_heartbeat = False
         while not self._stop.is_set():
+            if handle is not None:
+                if handle.fenced:
+                    return     # declared dead; lease already requeued
+                handle.beat()
             if self._pool_shrunk(spec.name):
                 return
+            # prompts are fetched under a lease: until this worker acks,
+            # the supervisor can requeue them (front of ready set) if the
+            # worker dies — no row is ever lost or handed out twice
             batch = self.tq.get(spec.name, bs, consumer=name, timeout=0.05,
-                                allow_partial=True)
+                                allow_partial=True, lease=True)
             if batch is None:
                 if self.tq.controllers[spec.name]._closed:
                     return
                 c_stalls.inc()
                 continue
+            lease = batch.pop("lease", None)
+            if handle is not None:
+                handle.current_lease = lease
             batch.pop("indices", None)
 
             # ---- weight policy at the generation-iteration boundary ----
@@ -537,19 +650,35 @@ class StageRunner:
                         recv.wait_and_swap(self.trainer_version,
                                            timeout=30.0)
 
+            if handle is not None:
+                handle.beat()      # weight waits above may be long
             n_in = len(batch[self._source_col])
             t_gen = time.monotonic()
             call_kw = dict(spec.kw)
             if supports_emit:
                 v = recv.version
-                call_kw["emit"] = lambda row: self._put_rows(
-                    spec, out_cols, [row], v, c_samples, c_tokens)
+                # a fenced replica must not write rows: the supervisor
+                # already requeued its lease, so anything this zombie
+                # emits would be a duplicate
+                call_kw["emit"] = lambda row: (
+                    True if handle is not None and handle.fenced
+                    else self._put_rows(spec, out_cols, [row], v,
+                                        c_samples, c_tokens))
+            if supports_heartbeat and handle is not None:
+                call_kw["heartbeat"] = handle.beat
             with self.log.span(name, "generate", version=recv.version,
                                n=n_in):
-                out = fn(batch, params=recv.params, rng=rng,
-                         version=recv.version, **call_kw) or {}
+                out = self._call_stage(
+                    spec.name, widx,
+                    lambda: fn(batch, params=recv.params, rng=rng,
+                               version=recv.version, **call_kw)) or {}
             h_batch.observe(time.monotonic() - t_gen)
 
+            if handle is not None and handle.fenced:
+                # fenced mid-verb (hung-replica recovery): drop whatever
+                # was not yet written and exit without acking — the
+                # replacement regenerates from the requeued lease
+                return
             conts = out.get("requeue") or []
             if conts:
                 cidx = self.tq.next_indices(len(conts))
@@ -559,6 +688,10 @@ class StageRunner:
             if not self._put_rows(spec, out_cols, out.get("rows") or [],
                                   recv.version, c_samples, c_tokens):
                 return
+            # outputs durably in the queue -> finalize the lease
+            self.tq.ack(spec.name, lease)
+            if handle is not None:
+                handle.current_lease = None
 
     # ------------------------------------------------------------------ #
     # transform stages (streaming map over rows)                          #
@@ -585,7 +718,9 @@ class StageRunner:
             idxs = batch.pop("indices")
             t_fn = time.monotonic()
             with self.log.span(name, spec.name, n=len(idxs)):
-                out = fn(batch, indices=idxs, **spec.kw) or {}
+                out = self._call_stage(
+                    spec.name, widx,
+                    lambda: fn(batch, indices=idxs, **spec.kw)) or {}
             h_batch.observe(time.monotonic() - t_fn)
             c_samples.inc(len(idxs))
             for col, vals in (out.get("updates") or {}).items():
@@ -631,7 +766,7 @@ class StageRunner:
                     h_staleness.observe(s)
                 t_up = time.monotonic()
                 with self.log.span(name, "update", step=step, n=n):
-                    m = fn(batch)
+                    m = self._call_stage(spec.name, 0, lambda: fn(batch))
                 h_batch.observe(time.monotonic() - t_up)
                 c_samples.inc(n)
                 if m:
@@ -671,7 +806,7 @@ class StageRunner:
             n = len(batch[spec.inputs[0]])
             t_fn = time.monotonic()
             with self.log.span(name, spec.name, n=n):
-                m = fn(batch)
+                m = self._call_stage(spec.name, 0, lambda: fn(batch))
             h_batch.observe(time.monotonic() - t_fn)
             c_samples.inc(n)
             if m:
@@ -702,14 +837,32 @@ class StageRunner:
     # lifecycle                                                           #
     # ------------------------------------------------------------------ #
 
-    def _guard(self, target, *args) -> None:
-        """Worker-thread wrapper: a stage exception aborts the whole run
-        loudly instead of dying as a silent daemon thread."""
+    def _guard(self, target, *args, stage: str = "run", worker: Any = -1,
+               handle=None) -> None:
+        """Worker-thread wrapper routing failures through the error
+        taxonomy: :class:`ReplicaCrash` on a supervised generate replica
+        triggers fleet recovery (lease requeue + respawn); anything else
+        aborts the whole run loudly — attributed to its stage and worker
+        — instead of dying as a silent daemon thread."""
         try:
             target(*args)
+        except ReplicaCrash as e:
+            if self._stop.is_set():
+                return         # run already stopping; nothing to recover
+            if handle is not None and self._supervisor is not None:
+                # crash path: requeue our own lease synchronously so the
+                # rows are back (in order) before the replacement spawns,
+                # then report our death; the monitor respawns the slot
+                self.tq.requeue(self.gen_stage.name, handle.current_lease)
+                handle.current_lease = None
+                self._supervisor.report_death(handle.rid, repr(e))
+            else:
+                self._fail(stage, worker, e)
         except Exception as e:                       # noqa: BLE001
-            self._fail(f"stage worker {target.__name__}{args!r} "
-                       f"failed: {e!r}")
+            self._fail(stage, worker, e)
+        else:
+            if handle is not None and self._supervisor is not None:
+                self._supervisor.retire(handle.rid)
 
     def run(self) -> WorkflowResult:
         sampler = None
@@ -717,23 +870,35 @@ class StageRunner:
             sampler = MetricsSampler(self.registry, self.cfg.metrics_jsonl,
                                      self.cfg.metrics_interval_s).start()
         t0 = time.monotonic()
-        feeder = threading.Thread(target=self._guard,
-                                  args=(self._feed_prompts,), daemon=True)
+        feeder = threading.Thread(
+            target=self._guard, args=(self._feed_prompts,),
+            kwargs=dict(stage="prompt_feeder", worker=0), daemon=True)
+        gen_name = self.gen_stage.name
         with self._pool_lock:
             for i in range(self.n_gen_workers):
-                self._threads.append(threading.Thread(
+                handle = self._supervisor.register(i, None) \
+                    if self._supervisor is not None else None
+                t = threading.Thread(
                     target=self._guard,
-                    args=(self._generate_worker, i, self.receivers[i]),
-                    daemon=True))
+                    args=(self._generate_worker, i, self.receivers[i],
+                          handle),
+                    kwargs=dict(stage=gen_name, worker=i, handle=handle),
+                    daemon=True)
+                if handle is not None:
+                    handle.thread = t
+                self._threads.append(t)
             for spec in self.transform_stages:
                 for w in range(self._desired[spec.name]):
                     self._threads.append(threading.Thread(
                         target=self._guard,
-                        args=(self._transform_worker, spec, w), daemon=True))
+                        args=(self._transform_worker, spec, w),
+                        kwargs=dict(stage=spec.name, worker=w),
+                        daemon=True))
             for spec in self.stream_train_stages:
                 self._threads.append(threading.Thread(
                     target=self._guard,
-                    args=(self._stream_train_worker, spec), daemon=True))
+                    args=(self._stream_train_worker, spec),
+                    kwargs=dict(stage=spec.name, worker=0), daemon=True))
             # mid-run spawns pick worker ids above every initial index so
             # consumer names never collide within a stage
             self._spawn_seq = max(self._desired.values(), default=1)
@@ -747,14 +912,22 @@ class StageRunner:
                 self.graph, self.registry, self._desired, self._resize_stage,
                 max_workers=self.cfg.max_stage_workers)
             monitor = threading.Thread(target=self._elastic_loop, daemon=True)
-        trainer = threading.Thread(target=self._guard, args=(self._driver,),
-                                   daemon=True)
+        super_mon = None
+        if self._supervisor is not None:
+            super_mon = threading.Thread(
+                target=self._supervisor.monitor, args=(self._stop,),
+                daemon=True)
+        trainer = threading.Thread(
+            target=self._guard, args=(self._driver,),
+            kwargs=dict(stage=self.driver_stage.name, worker=0), daemon=True)
         try:
             feeder.start()
             for w in self._threads:
                 w.start()
             if monitor is not None:
                 monitor.start()
+            if super_mon is not None:
+                super_mon.start()
             trainer.start()
             trainer.join()
             self._stop.set()
@@ -766,6 +939,8 @@ class StageRunner:
             feeder.join(timeout=5.0)
             if monitor is not None:
                 monitor.join(timeout=5.0)
+            if super_mon is not None:
+                super_mon.join(timeout=5.0)
         finally:
             if sampler is not None:
                 sampler.stop()

@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.core.obs import get_registry
+from repro.core.supervision.errors import WeightSyncTimeout
 
 
 @dataclass
@@ -69,16 +70,87 @@ class WeightChannel:
         with self._lock:
             return self._latest
 
-    def wait_for(self, version: int, timeout: Optional[float] = None
-                 ) -> Optional[VersionedWeights]:
+    def latest_version(self) -> int:
+        with self._lock:
+            return self._latest.version if self._latest is not None else -1
+
+    def wait_for(self, version: int, timeout: Optional[float] = None,
+                 strict: bool = False) -> Optional[VersionedWeights]:
+        """Block until a snapshot with ``>= version`` is staged. On
+        timeout: returns None, or with ``strict=True`` raises
+        :class:`WeightSyncTimeout` naming the version waited for and the
+        newest version actually seen — a timeout is never mistaken for a
+        successful no-op."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             while self._latest is None or self._latest.version < version:
                 rem = None if deadline is None else deadline - time.monotonic()
                 if rem is not None and rem <= 0:
+                    if strict:
+                        latest = self._latest.version \
+                            if self._latest is not None else -1
+                        raise WeightSyncTimeout(version, latest,
+                                                timeout_s=timeout or 0.0)
                     return None
                 self._cv.wait(timeout=rem if rem is not None else 0.1)
             return self._latest
+
+
+class BroadcastWeightChannel(WeightChannel):
+    """One-to-many weight broadcast with per-replica swap acknowledgment.
+
+    The trainer publishes ONE versioned host snapshot per step; every
+    subscribed replica reads the *same* staging buffer (the pytree is
+    shared by reference — zero extra host copies per replica, and
+    ``weight_bytes_published_total`` counts the payload once regardless
+    of fleet size). Each receiver acks the version it swapped in, so the
+    supervisor and the staleness gate can see exactly which replicas lag
+    during recovery: a freshly respawned replica subscribes at its
+    hand-off version and catches up on its first swap.
+    """
+
+    def __init__(self, bandwidth_gbps: float = 0.0, metrics=None):
+        super().__init__(bandwidth_gbps, metrics=metrics)
+        self._acked: Dict[int, int] = {}       # replica id -> acked version
+        m = metrics if metrics is not None else get_registry()
+        self._h_broadcast = m.histogram(
+            "weight_broadcast_seconds",
+            "one-to-many publish latency (one snapshot for N receivers)")
+
+    # -- subscription registry --------------------------------------------
+
+    def subscribe(self, replica_id: int, version: int = 0) -> None:
+        with self._lock:
+            self._acked[replica_id] = version
+
+    def unsubscribe(self, replica_id: int) -> None:
+        with self._lock:
+            self._acked.pop(replica_id, None)
+
+    def ack(self, replica_id: int, version: int) -> None:
+        with self._lock:
+            if replica_id in self._acked:
+                self._acked[replica_id] = max(self._acked[replica_id],
+                                              version)
+
+    def acked_versions(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self._acked)
+
+    def min_acked(self) -> int:
+        """Oldest version any live replica is still generating with —
+        the fleet-wide staleness floor during recovery."""
+        with self._lock:
+            return min(self._acked.values()) if self._acked else -1
+
+    def num_subscribers(self) -> int:
+        with self._lock:
+            return len(self._acked)
+
+    def offer(self, vw: VersionedWeights) -> None:
+        t0 = time.monotonic()
+        super().offer(vw)
+        self._h_broadcast.observe(time.monotonic() - t0)
 
 
 class WeightSender:
@@ -124,12 +196,17 @@ class WeightReceiver:
     boundaries and pays only H2D (delayed parameter update, §4.2.2)."""
 
     def __init__(self, channel: WeightChannel, init_params, version: int = 0,
-                 to_device: Optional[Callable] = None, metrics=None):
+                 to_device: Optional[Callable] = None, metrics=None,
+                 replica_id: Optional[int] = None):
         self.channel = channel
         self.params = init_params
         self.version = version
+        self.replica_id = replica_id
         self._to_device = to_device or (lambda tree: jax.tree.map(
             jax.numpy.asarray, tree))
+        # broadcast channels track per-replica swap acknowledgment
+        if replica_id is not None and hasattr(channel, "subscribe"):
+            channel.subscribe(replica_id, version)
         m = metrics if metrics is not None else get_registry()
         self._h_sync = m.histogram(
             "weight_sync_seconds",
@@ -151,6 +228,8 @@ class WeightReceiver:
             self._m_skipped.inc(skipped)
         self.version = vw.version
         self._h_sync.observe(time.monotonic() - t0, role="swap")
+        if self.replica_id is not None and hasattr(self.channel, "ack"):
+            self.channel.ack(self.replica_id, vw.version)
 
     def maybe_swap(self) -> bool:
         """Swap in the newest staged weights if any. Returns True if swapped."""
@@ -160,9 +239,13 @@ class WeightReceiver:
             return True
         return False
 
-    def wait_and_swap(self, version: int, timeout: Optional[float] = None
-                      ) -> bool:
-        vw = self.channel.wait_for(version, timeout)
+    def wait_and_swap(self, version: int, timeout: Optional[float] = None,
+                      strict: bool = True) -> bool:
+        """Block until ``>= version`` is staged, then swap. On timeout
+        raises :class:`WeightSyncTimeout` (naming the version waited for
+        and the newest one seen); ``strict=False`` restores the legacy
+        return-False behavior for callers that poll."""
+        vw = self.channel.wait_for(version, timeout, strict=strict)
         if vw is None:
             return False
         self._swap(vw)

@@ -212,7 +212,7 @@ class JaxRolloutEngine(RLAdapter):
         return finished, [self._member_from_seq(q) for q in paused]
 
     def generate_sequences(self, batch, *, params, rng, version: int = 0,
-                           emit=None, **kw):
+                           emit=None, heartbeat=None, **kw):
         """Stage verb: batch["prompt"] -> {"rows": [...], "requeue": [...]}.
 
         Chunked engines emit each finished group member immediately — the
@@ -220,8 +220,16 @@ class JaxRolloutEngine(RLAdapter):
         out without waiting for their group.  With the continuous backend
         an ``emit`` callback receives each finished row the moment its
         sequence completes (per-sample handoff into the TransferQueue);
-        emitted rows are excluded from the returned batch."""
+        emitted rows are excluded from the returned batch.
+
+        ``heartbeat`` (supervised fleets) is pinged per emitted sample so
+        a long rollout is never mistaken for a hung replica."""
         prompts = batch["prompt"]
+        if heartbeat is not None:
+            heartbeat()
+            if emit is not None:
+                inner = emit
+                emit = lambda row: (heartbeat(), inner(row))[1]
         if self.chunk_tokens:
             row_emit = None if emit is None else \
                 (lambda s: emit(self._member_row(s)))

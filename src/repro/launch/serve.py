@@ -8,14 +8,93 @@
 ``engines/continuous_batching`` subsystem the RL rollout stage uses
 (slot scheduler + paged KV cache), so inference traffic and training
 rollouts share one engine; ``fixed`` keeps the padded-batch decode loop.
+
+``--replicas N`` serves through a supervised generator fleet: N replica
+threads behind a :class:`ReplicaSupervisor` service registry. With
+``--crash-p`` > 0 a deterministic :class:`FaultInjector` kills replicas
+mid-serve; crashed replicas requeue their in-flight request to the front
+of the work queue and are respawned, so every request completes exactly
+once:
+
+  PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+      --replicas 3 --crash-p 0.1 --fault-seed 7
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import itertools
 import json
 import sys
+import threading
 import time
+
+
+def _serve_fleet(args, cfg, params, prompts, tok):
+    """Supervised replica fleet: a shared work queue drained by N replica
+    threads; crashes requeue the in-flight request and respawn."""
+    import collections
+
+    from repro.core.supervision import (FaultConfig, FaultInjector,
+                                        ReplicaCrash, ReplicaSupervisor)
+    from repro.engines.continuous_batching import ContinuousBatchingEngine
+
+    work = collections.deque(enumerate(prompts))
+    wlock = threading.Lock()
+    outputs: dict = {}
+    stop = threading.Event()
+    inj = FaultInjector(FaultConfig(crash_p=args.crash_p,
+                                    seed=args.fault_seed,
+                                    stages=("serve",)))
+    max_len = max(len(p["tokens"]) for p in prompts) + args.max_new_tokens
+    sup = ReplicaSupervisor(lambda dead: _spawn(),
+                            heartbeat_timeout_s=60.0,
+                            max_restarts=0, stage="serve")
+    rid_seq = itertools.count()
+
+    def _replica(handle):
+        eng = ContinuousBatchingEngine(
+            cfg, num_slots=args.slots, max_len=max_len,
+            max_new_tokens=args.max_new_tokens,
+            temperature=args.temperature, seed=args.seed)
+        while not stop.is_set():
+            handle.beat()
+            with wlock:
+                if not work:
+                    sup.retire(handle.rid)
+                    return
+                item = work.popleft()
+            try:
+                inj.check("serve", handle.rid)
+                i, p = item
+                q = eng.make_sequence(p["tokens"], meta={"prompt": p})
+                done, _ = eng.generate(params, [q])
+                ids = done[0].tokens[done[0].prompt_len:]
+                with wlock:
+                    outputs[i] = {"prompt": p["text"],
+                                  "response": tok.decode(ids)}
+            except ReplicaCrash as e:
+                with wlock:
+                    work.appendleft(item)    # in-flight request requeues
+                sup.report_death(handle.rid, repr(e))
+                return
+        sup.retire(handle.rid)
+
+    def _spawn() -> bool:
+        rid = next(rid_seq)
+        h = sup.register(rid, None, stage="serve")
+        t = threading.Thread(target=_replica, args=(h,), daemon=True)
+        h.thread = t
+        t.start()
+        return True
+
+    for _ in range(args.replicas):
+        _spawn()
+    while len(outputs) < len(prompts):
+        sup.poll()
+        time.sleep(0.01)
+    stop.set()
+    return [outputs[i] for i in range(len(prompts))], sup.restarts
 
 
 def main(argv=None):
@@ -30,6 +109,11 @@ def main(argv=None):
                     default="fixed")
     ap.add_argument("--slots", type=int, default=4,
                     help="decode slots (continuous engine)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1: supervised generator fleet (continuous)")
+    ap.add_argument("--crash-p", type=float, default=0.0,
+                    help="deterministic crash probability per request")
+    ap.add_argument("--fault-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     import jax
@@ -49,7 +133,11 @@ def main(argv=None):
     t0 = time.time()
     n_tokens = 0
     outputs = []
-    if args.engine == "continuous":
+    restarts = 0
+    if args.replicas > 1:
+        outputs, restarts = _serve_fleet(args, cfg, params, prompts, tok)
+        n_tokens = sum(len(tok.encode(o["response"])) for o in outputs)
+    elif args.engine == "continuous":
         from repro.engines.continuous_batching import \
             ContinuousBatchingEngine
         max_len = max(len(p["tokens"]) for p in prompts) \
@@ -82,6 +170,8 @@ def main(argv=None):
     wall = time.time() - t0
     print(json.dumps({"arch": args.arch, "engine": args.engine,
                       "requests": len(prompts),
+                      "replicas": args.replicas,
+                      "replica_restarts": restarts,
                       "wall_s": round(wall, 2),
                       "tokens_per_s": round(n_tokens / wall, 1),
                       "samples": outputs[:4]}, indent=1))

@@ -1,0 +1,443 @@
+"""Supervised generator fleet: error taxonomy + deterministic retry,
+config-driven fault injection, replica supervision (heartbeats, fencing,
+respawn, restart budget), TransferQueue lease/ack/requeue, one-to-many
+weight broadcast with per-replica acks, and chaos runs through the full
+StageRunner (exactly-once recovery under injected crashes)."""
+import threading
+import time
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.obs import MetricsRegistry
+from repro.core.supervision import (FaultConfig, FaultInjector, ReplicaCrash,
+                                    ReplicaSupervisor, RetryPolicy,
+                                    RetryableError, SupervisionExhausted,
+                                    TransientStageError, WeightSyncTimeout,
+                                    call_with_retry, is_retryable,
+                                    register_retryable)
+from repro.core.transfer_queue import TransferQueue
+from repro.core.workflow import (StageGraph, StageRunner, StageSpec,
+                                 WorkflowConfig)
+from repro.core.workflow.weight_sync import (BroadcastWeightChannel,
+                                             VersionedWeights, WeightChannel,
+                                             WeightReceiver, WeightSender)
+
+
+# ---------------------------------------------------------------------- #
+# error taxonomy                                                          #
+# ---------------------------------------------------------------------- #
+
+def test_taxonomy_retryable_vs_fatal():
+    assert is_retryable(RetryableError("x"))
+    assert is_retryable(TransientStageError("x"))
+    assert not is_retryable(ReplicaCrash("x"))       # fleet-level, not retry
+    assert not is_retryable(WeightSyncTimeout(3, 1, 2.0))
+    assert not is_retryable(ValueError("x"))
+
+
+def test_register_external_retryable():
+    class FlakyBackend(Exception):
+        pass
+
+    assert not is_retryable(FlakyBackend("x"))
+    register_retryable(FlakyBackend)
+    assert is_retryable(FlakyBackend("x"))
+
+
+# ---------------------------------------------------------------------- #
+# deterministic retry                                                     #
+# ---------------------------------------------------------------------- #
+
+def test_retry_backoff_bounded_and_deterministic():
+    p = RetryPolicy(max_attempts=5, base_s=0.1, multiplier=2.0,
+                    max_backoff_s=0.5, jitter=0.5, seed=3)
+    seq = [p.backoff_s(k, key="gen:0") for k in range(5)]
+    assert seq == [p.backoff_s(k, key="gen:0") for k in range(5)]  # determ.
+    for k, b in enumerate(seq):
+        cap = min(0.1 * 2.0 ** k, 0.5)
+        assert 0.5 * cap <= b <= cap            # jitter scales in [1-j, 1)
+    # a different key draws a different jitter stream
+    assert seq != [p.backoff_s(k, key="gen:1") for k in range(5)]
+
+
+def test_call_with_retry_recovers_then_exhausts():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientStageError("transient")
+        return "ok"
+
+    retried = []
+    out = call_with_retry(flaky, policy=RetryPolicy(max_attempts=3,
+                                                    base_s=0.0),
+                          on_retry=lambda a, e: retried.append(a),
+                          sleep=lambda s: None)
+    assert out == "ok" and calls["n"] == 3 and len(retried) == 2
+
+    calls["n"] = -10                            # always transient now
+    with pytest.raises(TransientStageError):
+        call_with_retry(flaky, policy=RetryPolicy(max_attempts=2,
+                                                  base_s=0.0),
+                        sleep=lambda s: None)
+
+
+def test_call_with_retry_fatal_not_retried():
+    calls = {"n": 0}
+
+    def fatal():
+        calls["n"] += 1
+        raise ValueError("fatal")
+
+    with pytest.raises(ValueError):
+        call_with_retry(fatal, policy=RetryPolicy(max_attempts=4,
+                                                  base_s=0.0),
+                        sleep=lambda s: None)
+    assert calls["n"] == 1
+
+
+# ---------------------------------------------------------------------- #
+# fault injection                                                         #
+# ---------------------------------------------------------------------- #
+
+def _fault_trace(cfg: FaultConfig, n: int = 32, stage: str = "generate",
+                 worker: int = 0):
+    inj = FaultInjector(cfg, metrics=MetricsRegistry(), sleep=lambda s: None)
+    trace = []
+    for _ in range(n):
+        try:
+            inj.check(stage, worker)
+            trace.append("ok")
+        except ReplicaCrash:
+            trace.append("crash")
+        except TransientStageError:
+            trace.append("error")
+    return trace
+
+
+def test_fault_injector_deterministic_by_seed():
+    cfg = FaultConfig(crash_p=0.2, error_p=0.2, seed=7)
+    t1 = _fault_trace(cfg)
+    assert t1 == _fault_trace(cfg)              # same seed -> same faults
+    assert t1 != _fault_trace(FaultConfig(crash_p=0.2, error_p=0.2, seed=8))
+    assert "crash" in t1 and "error" in t1
+
+
+def test_fault_injector_stage_filter_and_crash_cap():
+    cfg = FaultConfig(crash_p=1.0, stages=("generate",), max_crashes=2)
+    assert _fault_trace(cfg, n=8, stage="reward") == ["ok"] * 8
+    t = _fault_trace(cfg, n=8, stage="generate")
+    assert t == ["crash", "crash"] + ["ok"] * 6  # cap stops the injector
+
+
+# ---------------------------------------------------------------------- #
+# replica supervisor                                                      #
+# ---------------------------------------------------------------------- #
+
+def _supervisor(**kw):
+    log = SimpleNamespace(respawned=[], requeued=[], exhausted=[])
+    sup = ReplicaSupervisor(
+        lambda dead: (log.respawned.append(dead.rid), True)[1],
+        requeue=lambda dead: (log.requeued.append(dead.rid), 1)[1],
+        on_exhausted=log.exhausted.append,
+        heartbeat_timeout_s=kw.pop("heartbeat_timeout_s", 0.0),
+        metrics=MetricsRegistry(), **kw)
+    return sup, log
+
+
+def test_supervisor_reported_crash_requeues_then_respawns():
+    sup, log = _supervisor()
+    h = sup.register(0, None)
+    sup.report_death(0, "injected")
+    assert h.fenced                             # zombie writes are blocked
+    assert sup.poll() == 1
+    assert log.requeued == [0] and log.respawned == [0]
+    assert sup.poll() == 0                      # recovery is collect-once
+    assert sup.restarts == 1 and sup.deaths == 1
+
+
+def test_supervisor_detects_dead_thread_and_stale_heartbeat():
+    sup, log = _supervisor(heartbeat_timeout_s=0.05)
+    t = threading.Thread(target=lambda: None)
+    t.start()
+    t.join()
+    sup.register(0, t)                          # thread already exited
+    h1 = sup.register(1, threading.current_thread())
+    h1.last_beat -= 1.0                         # stale heartbeat (hung)
+    assert sup.poll() == 2
+    assert sorted(log.respawned) == [0, 1]
+    assert h1.fenced and "heartbeat" in h1.reason
+
+
+def test_supervisor_budget_exhaustion_fails_loudly():
+    sup, log = _supervisor(max_restarts=1)
+    sup.register(0, None)
+    sup.register(1, None)
+    sup.report_death(0, "first")
+    sup.poll()
+    sup.report_death(1, "second")               # budget already spent
+    assert sup.poll() == 0
+    assert len(log.exhausted) == 1
+    assert isinstance(log.exhausted[0], SupervisionExhausted)
+    assert log.requeued == [0, 1]               # rows still recovered
+
+
+def test_supervisor_retired_replica_not_respawned():
+    sup, log = _supervisor()
+    sup.register(0, None)
+    sup.retire(0)                               # clean drain/shrink exit
+    assert sup.poll() == 0 and not log.respawned
+
+
+# ---------------------------------------------------------------------- #
+# TransferQueue lease / ack / requeue                                     #
+# ---------------------------------------------------------------------- #
+
+def _leased_queue(n=6):
+    tq = TransferQueue(capacity=16, tasks={"gen": ["prompt"]},
+                       num_storage_units=1, metrics=MetricsRegistry())
+    idxs = tq.next_indices(n)
+    tq.put_batch(idxs, "prompt", [f"p{i}" for i in range(n)])
+    return tq
+
+
+def test_lease_requeue_restores_fifo_front_order():
+    tq = _leased_queue()
+    b1 = tq.get("gen", 2, consumer="w0", lease=True)
+    b2 = tq.get("gen", 2, consumer="w1", lease=True)
+    assert b1["indices"] == [0, 1] and b2["indices"] == [2, 3]
+    # w0 dies: its rows return to the FRONT, ahead of still-ready row 4/5
+    assert tq.requeue("gen", b1["lease"]) == 2
+    b3 = tq.get("gen", 4, consumer="w1", lease=True)
+    assert b3["indices"] == [0, 1, 4, 5]        # recovered order preserved
+    # requeue is idempotent; acked leases can never requeue
+    assert tq.requeue("gen", b1["lease"]) == 0
+    tq.ack("gen", b2["lease"])
+    assert tq.requeue("gen", b2["lease"]) == 0
+    reg = tq.controllers["gen"].metrics
+    assert reg.get("rows_requeued_total").value(task="gen") == 2
+
+
+def test_requeue_consumer_returns_all_outstanding_leases():
+    tq = _leased_queue()
+    tq.get("gen", 2, consumer="w0", lease=True)
+    tq.get("gen", 2, consumer="w0", lease=True)
+    tq.get("gen", 2, consumer="w1", lease=True)
+    assert tq.controllers["gen"].outstanding_leases("w0") == 2
+    assert tq.requeue_consumer("gen", "w0") == 4
+    assert tq.controllers["gen"].outstanding_leases("w0") == 0
+    assert tq.controllers["gen"].outstanding_leases("w1") == 1
+
+
+def test_unleased_get_unchanged():
+    tq = _leased_queue()
+    b = tq.get("gen", 2, consumer="w0")
+    assert "lease" not in b
+    assert tq.controllers["gen"].outstanding_leases() == 0
+
+
+# ---------------------------------------------------------------------- #
+# one-to-many weight broadcast                                            #
+# ---------------------------------------------------------------------- #
+
+def test_broadcast_publishes_once_for_n_receivers():
+    import numpy as np
+    reg = MetricsRegistry()
+    ch = BroadcastWeightChannel(metrics=reg)
+    sender = WeightSender(ch, mode="sync", metrics=reg)
+    params = {"w": np.ones((8, 8), np.float32)}
+    recvs = [WeightReceiver(ch, params, metrics=reg, replica_id=i)
+             for i in range(4)]
+    assert ch.num_subscribers() == 4
+    sender.publish(params, 1)
+    # bytes on the channel are independent of fleet size (one snapshot)
+    assert reg.get("weight_bytes_published_total").value() == 8 * 8 * 4
+    for r in recvs:
+        assert r.maybe_swap()
+    # ... and every receiver swapped the SAME host buffer (by reference)
+    hosts = {id(ch.peek().host_params)}
+    assert len(hosts) == 1
+    assert ch.acked_versions() == {0: 1, 1: 1, 2: 1, 3: 1}
+    assert ch.min_acked() == 1
+    assert reg.get("weight_broadcast_seconds").snapshot()[0]["count"] == 1
+
+
+def test_broadcast_min_acked_tracks_lagging_replica():
+    import numpy as np
+    ch = BroadcastWeightChannel(metrics=MetricsRegistry())
+    params = {"w": np.zeros(2, np.float32)}
+    fast = WeightReceiver(ch, params, metrics=MetricsRegistry(),
+                          replica_id=0)
+    slow = WeightReceiver(ch, params, metrics=MetricsRegistry(),
+                          replica_id=1)
+    ch.offer(VersionedWeights(3, params))
+    fast.maybe_swap()
+    assert ch.min_acked() == 0                  # slow replica still at 0
+    slow.maybe_swap()
+    assert ch.min_acked() == 3
+    ch.unsubscribe(1)                           # dead replica leaves the
+    ch.offer(VersionedWeights(4, params))       # staleness floor
+    fast.maybe_swap()
+    assert ch.acked_versions() == {0: 4}
+
+
+# ---------------------------------------------------------------------- #
+# weight-sync timeout (satellite: informative, never a silent no-op)      #
+# ---------------------------------------------------------------------- #
+
+def test_wait_for_timeout_names_versions():
+    ch = WeightChannel(metrics=MetricsRegistry())
+    ch.offer(VersionedWeights(2, {"w": 1}))
+    with pytest.raises(WeightSyncTimeout) as ei:
+        ch.wait_for(5, timeout=0.01, strict=True)
+    err = ei.value
+    assert err.waited_for == 5 and err.latest_seen == 2
+    assert "version >= 5" in str(err) and "latest version seen: 2" in str(err)
+    # non-strict callers keep the legacy poll-style None
+    assert ch.wait_for(5, timeout=0.01) is None
+
+
+def test_wait_and_swap_timeout_raises_by_default():
+    ch = WeightChannel(metrics=MetricsRegistry())
+    recv = WeightReceiver(ch, {"w": 0}, metrics=MetricsRegistry())
+    with pytest.raises(WeightSyncTimeout) as ei:
+        recv.wait_and_swap(3, timeout=0.01)
+    assert ei.value.waited_for == 3 and ei.value.latest_seen == -1
+    assert recv.wait_and_swap(3, timeout=0.01, strict=False) is False
+    assert recv.version == 0                    # timeout never fake-swaps
+
+
+# ---------------------------------------------------------------------- #
+# StageRunner error attribution (satellite: first failure wins)           #
+# ---------------------------------------------------------------------- #
+
+def _toy_graph(gen_fn=None, enrich_fn=None):
+    def gen(batch, *, params, rng, version=0, **kw):
+        return {"rows": [dict(item=x, token_len=1)
+                         for x in batch["prompt"] for _ in range(2)]}
+
+    def enrich(batch, *, indices, **kw):
+        return {"updates": {"score": [v + 1 for v in batch["item"]]}}
+
+    def train(batch, **kw):
+        return {"n": len(batch["version"])}
+
+    g = StageGraph(source_columns=("prompt",))
+    g.add(StageSpec("generate", inputs=("prompt",),
+                    outputs=("item", "version"), fn=gen_fn or gen,
+                    kind="generate"))
+    g.add(StageSpec("enrich", inputs=("item",), outputs=("score",),
+                    fn=enrich_fn or enrich))
+    g.add(StageSpec("actor_update", inputs=("item", "score", "version"),
+                    engine="trainer", fn=train, kind="train",
+                    drives_steps=True))
+    return g
+
+
+def _runner(graph, metrics=None, **cfg_kw):
+    cfg_kw.setdefault("mode", "streaming")
+    cfg_kw.setdefault("num_rollout_workers", 2)
+    cfg_kw.setdefault("rollout_batch", 2)
+    cfg_kw.setdefault("train_micro_batch", 4)
+    cfg_kw.setdefault("prompts_per_step", 4)
+    cfg_kw.setdefault("group_size", 2)
+    cfg_kw.setdefault("num_steps", 3)
+    return StageRunner(
+        WorkflowConfig(**cfg_kw), graph,
+        engines={"trainer": SimpleNamespace(params={"w": 0})},
+        prompt_stream=lambda s: [1, 2, 3, 4],
+        metrics=metrics or MetricsRegistry())
+
+
+def test_fail_names_stage_and_worker_and_keeps_first():
+    def bad_enrich(batch, *, indices, **kw):
+        raise KeyError("enrich exploded")
+
+    runner = _runner(_toy_graph(enrich_fn=bad_enrich))
+    with pytest.raises(RuntimeError, match=r"stage 'enrich' worker 0.*"
+                                           r"enrich exploded"):
+        runner.run()
+    assert runner._error_origin == ("enrich", 0)
+
+
+def test_fail_first_failure_wins_when_workers_race():
+    runner = _runner(_toy_graph())
+    runner._fail("generate", 1, ValueError("root cause"))
+    runner._fail("enrich", 0, ValueError("victim of the stop"))
+    assert runner._error_origin == ("generate", 1)
+    assert "root cause" in runner._error
+
+
+# ---------------------------------------------------------------------- #
+# chaos through the full StageRunner                                      #
+# ---------------------------------------------------------------------- #
+
+def test_supervised_run_recovers_from_injected_crashes():
+    """Crashes on supervised generate replicas must not lose or duplicate
+    a single row: leases requeue at the front, replicas respawn, and the
+    trained totals match a fault-free run exactly."""
+    reg = MetricsRegistry()
+    # seed 8 crashes worker 0 on its first call (and worker 1 soon after)
+    runner = _runner(_toy_graph(), metrics=reg,
+                     faults=FaultConfig(crash_p=0.05, seed=8,
+                                        stages=("generate",)),
+                     heartbeat_timeout_s=30.0, max_replica_restarts=16)
+    r = runner.run()
+    assert r.samples_trained == 3 * 8           # zero lost rows
+    assert reg.get("stage_samples_total").value(stage="generate") == 3 * 8
+    assert reg.get("replica_restarts_total").value(stage="generate") >= 1
+    assert reg.get("rows_requeued_total").value(task="generate") >= 1
+    assert reg.get("faults_injected_total").value(
+        stage="generate", kind="crash") >= 1
+    # recovered replicas subscribed to the broadcast under fresh ids
+    assert runner.channel.num_subscribers() >= 2
+    assert runner._supervisor.restarts == runner._supervisor.deaths
+
+
+def test_supervised_async_run_with_crashes_and_transients():
+    """Async mode under combined crash + transient-error injection:
+    transients retry in place (stage_retries_total), crashes recover
+    through the fleet, totals stay exact."""
+    reg = MetricsRegistry()
+    runner = _runner(_toy_graph(), metrics=reg, mode="async", staleness=1,
+                     faults=FaultConfig(crash_p=0.05, error_p=0.3, seed=8,
+                                        stages=("generate",)),
+                     heartbeat_timeout_s=30.0, max_replica_restarts=16,
+                     max_stage_retries=4)
+    r = runner.run()
+    assert r.samples_trained == 3 * 8
+    assert reg.get("stage_retries_total").value(stage="generate") >= 1
+    assert reg.get("replica_restarts_total").value(stage="generate") >= 1
+
+
+def test_restart_budget_exhaustion_fails_the_run():
+    reg = MetricsRegistry()
+    runner = _runner(_toy_graph(), metrics=reg,
+                     faults=FaultConfig(crash_p=1.0, seed=0,
+                                        stages=("generate",)),
+                     heartbeat_timeout_s=30.0, max_replica_restarts=2)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        runner.run()
+
+
+def test_unsupervised_crash_is_fatal_with_attribution():
+    runner = _runner(_toy_graph(), supervise=False,
+                     faults=FaultConfig(crash_p=1.0, seed=0,
+                                        stages=("generate",)))
+    with pytest.raises(RuntimeError, match=r"stage 'generate' worker \d"):
+        runner.run()
+
+
+def test_supervision_summary_line_in_report():
+    from repro.core.obs import render_report
+    reg = MetricsRegistry()
+    runner = _runner(_toy_graph(), metrics=reg,
+                     faults=FaultConfig(crash_p=0.05, seed=8,
+                                        stages=("generate",)),
+                     heartbeat_timeout_s=30.0, max_replica_restarts=16)
+    r = runner.run()
+    report = render_report(r.telemetry)
+    assert "supervision:" in report
+    assert "replica restarts" in report and "rows requeued" in report
