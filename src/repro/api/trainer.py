@@ -15,6 +15,7 @@ advantage, actor/critic update) streams as its own pipeline stage.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Optional
 
 import jax
@@ -60,7 +61,13 @@ class TrainerConfig:
                                        # actor update (interpret off-TPU)
     gamma: float = 1.0                 # PPO/GAE discount
     gae_lambda: float = 0.95           # PPO/GAE lambda
-    checkpoint_dir: str = ""           # save final state when set
+    checkpoint_dir: str = ""           # run-snapshot dir; also gets a
+                                       # legacy "<dir>/final" state dump
+    checkpoint_interval_steps: int = 1  # snapshot every N steps (0 = only
+                                        # run start/end + failure)
+    checkpoint_keep_last: int = 3      # snapshot retention (keep-last-k)
+    supervise_trainer: bool = True     # warm trainer restart on crash
+    max_trainer_restarts: int = 4      # warm-restart budget
     channel_bandwidth_gbps: float = 0.0  # simulated host-net weight path
     metrics_jsonl: str = ""            # periodic metrics snapshots (JSONL)
     metrics_interval_s: float = 0.25   # sampler cadence when enabled
@@ -130,12 +137,24 @@ class Trainer:
             self.engines["critic"] = self.critic_engine
         self.dataset = PromptDataset(seed=tcfg.seed)
 
-    def fit(self):
+    def fit(self, resume: Optional[str] = None):
         """Run the workflow; the returned ``WorkflowResult`` carries the
         full telemetry dict (per-stage table, busy/wait fractions,
         staleness quantiles, raw metrics snapshot) — render it with
-        :func:`repro.core.obs.render_report`."""
+        :func:`repro.core.obs.render_report`.
+
+        ``resume="auto"`` (or an explicit snapshot path) cold-resumes a
+        killed run from its newest intact run snapshot under
+        ``checkpoint_dir``: engine states, the published weight version,
+        rollout sampling bases and the dataset cursor are restored, so a
+        fixed-seed resumed run reproduces the uninterrupted run's metrics
+        bit-for-bit (synchronous/streaming modes). ``"auto"`` with no
+        snapshot on disk silently starts fresh; an explicit path that is
+        missing or torn raises."""
         t = self.tcfg
+        resume_doc = None
+        if resume:
+            resume_doc = self._load_resume(resume)
         wcfg = WorkflowConfig(
             mode=t.mode, num_rollout_workers=t.rollout_workers,
             rollout_batch=t.rollout_batch,
@@ -154,19 +173,53 @@ class Trainer:
             max_replica_restarts=t.max_replica_restarts,
             heartbeat_timeout_s=t.heartbeat_timeout_s,
             max_stage_retries=t.max_stage_retries,
-            retry_backoff_s=t.retry_backoff_s, faults=t.faults)
+            retry_backoff_s=t.retry_backoff_s, faults=t.faults,
+            checkpoint_dir=t.checkpoint_dir,
+            checkpoint_interval_steps=t.checkpoint_interval_steps,
+            checkpoint_keep_last=t.checkpoint_keep_last,
+            supervise_trainer=t.supervise_trainer,
+            max_trainer_restarts=t.max_trainer_restarts)
         graph = build_dataflow(t.algorithm, kl_coef=t.kl_coef,
                                gamma=t.gamma, lam=t.gae_lambda)
         runner = StageRunner(
             wcfg, graph, engines=self.engines,
             prompt_stream=lambda s: self.dataset.prompts_for_step(
-                s, t.prompts_per_step))
+                s, t.prompts_per_step),
+            resume=resume_doc)
         result = runner.run()
         if t.checkpoint_dir:
+            # legacy single-state dump alongside the run snapshots (the
+            # snapshots own the directory root)
             from repro.training import save_checkpoint
-            save_checkpoint(t.checkpoint_dir, self.train_engine.state,
+            save_checkpoint(os.path.join(t.checkpoint_dir, "final"),
+                            self.train_engine.state,
                             step=int(self.train_engine.state.step))
         return result
+
+    def _load_resume(self, resume: str) -> Optional[dict]:
+        """Resolve + load a run snapshot and restore engine/rollout state
+        in place; returns the run-state doc handed to the StageRunner."""
+        t = self.tcfg
+        if not t.checkpoint_dir and resume == "auto":
+            return None
+        from repro.core.recovery import RunCheckpointer
+        ckpt = RunCheckpointer(t.checkpoint_dir or ".",
+                               keep_last=t.checkpoint_keep_last)
+        path = ckpt.resolve(resume)
+        if path is None:
+            return None                 # auto + nothing intact: fresh run
+        doc = ckpt.load(path)
+        step = int(doc["step"])
+        for key, eng in ((k, e) for k, e in self.engines.items()
+                         if hasattr(e, "state")):
+            if key in doc.get("engines", []):
+                eng.state, _ = ckpt.load_engine(path, key, eng.state)
+                if hasattr(eng, "version"):
+                    eng.version = step
+        roll = doc.get("rollout") or {}
+        self.rollout_engine._gid = int(roll.get("gid", 0))
+        self.rollout_engine.cb_uid_start = int(roll.get("cb_next_uid", 0))
+        return doc
 
     def restore(self, path: str) -> int:
         """Load a checkpoint into the training engine; returns the step."""

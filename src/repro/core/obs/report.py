@@ -111,6 +111,9 @@ def render_report(telemetry: dict) -> str:
     superv = _supervision_summary(telemetry.get("metrics", {}))
     if superv:
         lines += ["", superv]
+    recov = _recovery_summary(telemetry.get("metrics", {}))
+    if recov:
+        lines += ["", recov]
     return "\n".join(lines)
 
 
@@ -158,4 +161,25 @@ def _supervision_summary(metrics: dict) -> str:
             f"{int(requeued)} rows requeued")
     if injected:
         line += f" · {int(injected)} faults injected"
+    return line
+
+
+def _recovery_summary(metrics: dict) -> str:
+    """One-line durability summary: run snapshots committed (bytes +
+    write wall time), warm trainer restarts, duplicate rows dropped."""
+    writes = _metric_values(metrics, "checkpoint_write_seconds")
+    n_snaps = sum(v.get("count", 0) for v in writes)
+    if not n_snaps:
+        return ""
+    w_s = sum(v.get("sum", 0.0) for v in writes)
+    mb = sum(v["value"] for v in
+             _metric_values(metrics, "checkpoint_bytes_total")) / 1e6
+    restarts = sum(v["value"] for v in
+                   _metric_values(metrics, "trainer_restarts_total"))
+    dups = sum(v["value"] for v in
+               _metric_values(metrics, "rows_dropped_duplicate_total"))
+    line = (f"recovery: {int(n_snaps)} snapshots · {mb:.2f} MB · "
+            f"{w_s:.2f}s write time · {int(restarts)} trainer restarts")
+    if dups:
+        line += f" · {int(dups)} duplicate rows dropped"
     return line

@@ -1,0 +1,7 @@
+"""Recovery & durability: atomic versioned run snapshots (engine state +
+streaming cursors + TransferQueue watermarks) with LATEST pointer,
+keep-last-k retention and torn-snapshot fallback — the substrate for
+warm trainer restarts and cold ``Trainer.fit(resume=...)``."""
+from repro.core.recovery.snapshot import RunCheckpointer
+
+__all__ = ["RunCheckpointer"]

@@ -31,7 +31,11 @@ class FaultConfig:
     """Crash/error/delay probabilities per stage call. ``stages`` limits
     injection to the named stages (empty = every stage); ``max_crashes``
     bounds total injected crashes (0 = unlimited) so a bounded restart
-    budget cannot be exhausted by the injector itself."""
+    budget cannot be exhausted by the injector itself.
+    ``crash_on_calls`` schedules *deterministic* crashes at exact
+    per-(stage, worker) call ordinals on top of the probability bands —
+    how the trainer-kill arm murders the driver at a chosen mid-run
+    step instead of hunting for a seed."""
     crash_p: float = 0.0
     error_p: float = 0.0
     delay_p: float = 0.0
@@ -39,10 +43,12 @@ class FaultConfig:
     seed: int = 0
     stages: Tuple[str, ...] = ()
     max_crashes: int = 0
+    crash_on_calls: Tuple[int, ...] = ()
 
     @property
     def active(self) -> bool:
-        return (self.crash_p + self.error_p + self.delay_p) > 0.0
+        return (self.crash_p + self.error_p + self.delay_p) > 0.0 \
+            or bool(self.crash_on_calls)
 
 
 class FaultInjector:
@@ -79,8 +85,9 @@ class FaultInjector:
             ordinal = self._calls.get((stage, worker), 0)
             self._calls[(stage, worker)] = ordinal + 1
             u = self._uniform(stage, worker, ordinal)
-            crash = u < cfg.crash_p and \
-                (cfg.max_crashes <= 0 or self._crashes < cfg.max_crashes)
+            crash = ordinal in cfg.crash_on_calls or \
+                (u < cfg.crash_p and
+                 (cfg.max_crashes <= 0 or self._crashes < cfg.max_crashes))
             if crash:
                 self._crashes += 1
         if crash:

@@ -266,11 +266,31 @@ class TransferQueueController:
             return len(rows)
 
     def requeue_consumer(self, consumer: str) -> int:
-        """Requeue every outstanding lease held by ``consumer``."""
+        """Requeue every outstanding lease held by ``consumer``.
+
+        Leases are requeued newest-first: each ``requeue_lease`` places
+        its rows at the very front, so finishing with the *oldest* lease
+        leaves the ready set in original issue order — a consumer that
+        held several leases (the checkpointing trainer acks only at
+        snapshot boundaries) re-fetches its rows in exactly the order it
+        first consumed them."""
         with self._lock:
-            ids = [lid for lid, rec in self._leases.items()
-                   if rec["consumer"] == consumer]
+            ids = sorted((lid for lid, rec in self._leases.items()
+                          if rec["consumer"] == consumer), reverse=True)
         return sum(self.requeue_lease(lid) for lid in ids)
+
+    def state_snapshot(self) -> dict:
+        """Durable-cursor view for run snapshots: consumed/ready
+        watermarks plus the in-flight leases (rows + holder)."""
+        with self._lock:
+            return {
+                "consumed": int(sum(self._consumed)),
+                "ready": len(self._avail),
+                "closed": bool(self._closed),
+                "leases": {int(lid): {"rows": list(rec["rows"]),
+                                      "consumer": rec["consumer"]}
+                           for lid, rec in self._leases.items()},
+            }
 
     def outstanding_leases(self, consumer: Optional[str] = None) -> int:
         with self._lock:

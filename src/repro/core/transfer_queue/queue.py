@@ -9,7 +9,6 @@ their required columns are ready, never waiting for the whole global batch
 """
 from __future__ import annotations
 
-import itertools
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Union
 
@@ -22,14 +21,17 @@ class TransferQueue:
     def __init__(self, capacity: int, tasks: Dict[str, Sequence[str]],
                  num_storage_units: int = 2,
                  policy: Union[str, Dict[str, str]] = "fifo",
-                 metrics=None):
+                 metrics=None, uid_start: int = 0):
         """tasks: {task_name: required columns}. ``policy`` is one name
         for every controller, or {task: name} overriding per consumer
         stage (missing tasks use the ``"default"`` entry, else fifo) —
         token balancing applies to *any* stage, not just the trainer.
         ``metrics`` is an optional
         :class:`repro.core.obs.MetricsRegistry` shared by every
-        controller (defaults to the process-global registry)."""
+        controller (defaults to the process-global registry).
+        ``uid_start`` offsets the global row-uid counter — a cold-resumed
+        run continues the uid space past its snapshot watermark so
+        restored acked uids can never collide with fresh rows."""
         self.capacity = capacity
         self.data_plane = DataPlane(num_storage_units)
         self.controllers: Dict[str, TransferQueueController] = {}
@@ -42,7 +44,7 @@ class TransferQueue:
                                         policy=task_policy, metrics=metrics)
             self.controllers[task] = c
             self.data_plane.register_controller(c)
-        self._idx_counter = itertools.count()
+        self._next_uid = int(uid_start)
         self._idx_lock = threading.Lock()
 
     # -- producers -----------------------------------------------------------
@@ -50,7 +52,15 @@ class TransferQueue:
     def next_indices(self, n: int) -> List[int]:
         """Reserve n fresh global row indices."""
         with self._idx_lock:
-            return [next(self._idx_counter) for _ in range(n)]
+            start = self._next_uid
+            self._next_uid = start + n
+            return list(range(start, start + n))
+
+    @property
+    def next_uid(self) -> int:
+        """The uid the next produced row will take (durable-cursor peek)."""
+        with self._idx_lock:
+            return self._next_uid
 
     def put(self, idx: int, column: str, value: Any,
             token_len: Optional[int] = None) -> None:
@@ -101,6 +111,15 @@ class TransferQueue:
         """Return every unacked lease of a dead consumer to ready."""
         return self.controllers[task].requeue_consumer(consumer)
 
+    def cursor(self) -> Dict[str, Any]:
+        """Durable snapshot cursor: the global uid watermark plus every
+        controller's consumed/ready counts and in-flight leases — what a
+        :class:`repro.core.recovery.RunCheckpointer` persists so a
+        resumed run knows where the stream stood."""
+        return {"next_uid": self.next_uid,
+                "tasks": {t: c.state_snapshot()
+                          for t, c in self.controllers.items()}}
+
     def dataloader(self, task: str, batch_size: int, consumer: str = "dp0",
                    allow_partial: bool = True) -> "StreamingDataLoader":
         return StreamingDataLoader(self, task, batch_size, consumer,
@@ -121,7 +140,8 @@ class TransferQueue:
         self.data_plane.clear()
         for c in self.controllers.values():
             c.reset(capacity)
-        self._idx_counter = itertools.count()
+        with self._idx_lock:
+            self._next_uid = 0
 
 
 class StreamingDataLoader:

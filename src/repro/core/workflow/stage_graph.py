@@ -82,6 +82,14 @@ class WorkflowConfig:
     max_stage_retries: int = 2       # extra attempts for RetryableError
     retry_backoff_s: float = 0.05    # base of exp backoff (+ determ. jitter)
     faults: Optional[FaultConfig] = None  # deterministic chaos injection
+    # -- durable run checkpointing & trainer crash recovery ---------------
+    checkpoint_dir: str = ""         # run-snapshot directory ("" = off)
+    checkpoint_interval_steps: int = 1  # snapshot every N steps (0 = only
+                                        # at run start/end + failure)
+    checkpoint_keep_last: int = 3    # snapshot retention (keep-last-k)
+    supervise_trainer: bool = True   # warm-restart the driver from the
+                                     # newest snapshot on a trainer crash
+    max_trainer_restarts: int = 4    # warm-restart budget
 
     @property
     def samples_per_step(self) -> int:
@@ -249,7 +257,13 @@ class StageRunner:
                  engines: Dict[str, Any],
                  prompt_stream: Callable[[int], List[Any]],
                  log: Optional[EventLog] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 resume: Optional[dict] = None):
+        """``resume`` is a run-snapshot document (``RunCheckpointer.load``)
+        for cold resume: the runner starts at the snapshot's step, the
+        feeder re-primes prompts from the dataset cursor, and the queue
+        continues the snapshot's uid space (caller restores the engine
+        states before constructing the runner)."""
         graph.validate()
         self.cfg = cfg
         self.graph = graph
@@ -257,6 +271,10 @@ class StageRunner:
         self.prompt_stream = prompt_stream
         self.log = log or EventLog()
         self.registry = metrics if metrics is not None else get_registry()
+        self._resume = resume
+        resume_step = int(resume["step"]) if resume else 0
+        resume_uid = int(resume.get("queue", {}).get("next_uid", 0)) \
+            if resume else 0
         # declare stage kinds in topo order so gantt symbols for custom
         # stages are deterministic across runs
         self.log.register_kinds([s.name for s in graph.topo_order()])
@@ -290,7 +308,7 @@ class StageRunner:
         self.tq = TransferQueue(
             capacity=capacity, tasks=graph.tasks(),
             num_storage_units=cfg.num_storage_units, policy=cfg.policy,
-            metrics=self.registry)
+            metrics=self.registry, uid_start=resume_uid)
 
         driver_engine = self.engines[self.driver_stage.engine] \
             if self.driver_stage.engine else None
@@ -346,14 +364,14 @@ class StageRunner:
             self.channel, mode="async" if cfg.mode == "async" else "sync",
             metrics=self.registry)
         self.receivers = [
-            WeightReceiver(self.channel, init_weights, version=0,
+            WeightReceiver(self.channel, init_weights, version=resume_step,
                            metrics=self.registry, replica_id=i)
             for i in range(self.n_gen_workers)]
         self.stagger = StaggeredUpdateGroup(self.receivers) \
             if cfg.staggered else None
         self._driver_engine = driver_engine
 
-        self.trainer_version = 0
+        self.trainer_version = resume_step
         self._stop = threading.Event()
         self._step_done = threading.Condition()
         self.staleness_seen: List[int] = []
@@ -363,6 +381,31 @@ class StageRunner:
         self._error: Optional[str] = None
         self._error_origin: Optional[Tuple[str, Any]] = None
         self._fail_lock = threading.Lock()
+
+        # ---- durable run checkpointing & trainer recovery ---------------
+        self._ckpt = None
+        if cfg.checkpoint_dir:
+            from repro.core.recovery import RunCheckpointer
+            self._ckpt = RunCheckpointer(
+                cfg.checkpoint_dir, keep_last=cfg.checkpoint_keep_last,
+                metrics=self.registry)
+        self._train_step = resume_step    # next step the driver runs
+        self._feed_start = resume_step    # dataset/prompt-feed cursor
+        self._trainer_epoch = 0           # bumped per warm restart (fence)
+        self._trainer_restarts = 0
+        self._last_snapshot_step = resume_step if resume else -1
+        self._acked_uids: set = set()     # consumed watermark (dup guard)
+        self._step_leases: List[Tuple[int, List[int]]] = []  # current step
+        self._commit_pending: List[Tuple[int, List[int]]] = []  # completed
+        if resume:
+            self.metrics = [dict(m) for m in resume.get("metrics", [])]
+            self.staleness_seen = [int(s) for s in
+                                   resume.get("staleness_seen", [])]
+            self.aux_metrics = {k: [dict(m) for m in v] for k, v in
+                                (resume.get("aux_metrics") or {}).items()}
+            self.samples_trained = int(resume.get(
+                "samples_trained", resume_step * cfg.samples_per_step))
+            self._acked_uids = set(resume.get("acked_uids", []))
 
         # ---- supervision & fault tolerance -----------------------------
         faults = cfg.faults
@@ -402,6 +445,13 @@ class StageRunner:
         self._c_retries = m.counter(
             "stage_retries_total",
             "retryable stage failures retried in place (backoff)")
+        self._c_trainer_restarts = m.counter(
+            "trainer_restarts_total",
+            "warm trainer restarts from a run snapshot")
+        self._c_dup_dropped = m.counter(
+            "rows_dropped_duplicate_total",
+            "fetched rows past the durable consumed watermark dropped by "
+            "the duplicate guard (never double-trained)")
 
     def _fail(self, stage: str, worker: Any, err: Any) -> None:
         """Record a fatal stage error and stop the run; run() re-raises.
@@ -413,6 +463,10 @@ class StageRunner:
                 self._error = f"stage {stage!r} worker {worker}: {err!r}"
                 self._error_origin = (stage, worker)
         self._stop.set()
+        # wake any consumer blocked in tq.get() — a fatal error is
+        # terminal, so waiting out the fetch timeout only delays the
+        # unwind (and the final-flush / last-snapshot failure path)
+        self.tq.close()
         with self._step_done:
             self._step_done.notify_all()
 
@@ -733,8 +787,38 @@ class StageRunner:
     # ------------------------------------------------------------------ #
 
     def _driver(self) -> None:
+        """Supervised step driver: runs :meth:`_driver_loop` under the
+        trainer-recovery policy. A :class:`ReplicaCrash` out of the loop
+        (chaos arm or a real trainer death) warm-restarts the loop from
+        the newest intact run snapshot — same process, generate replicas
+        keep streaming — until the restart budget is spent, after which
+        the crash propagates and fails the run loudly."""
+        cfg = self.cfg
+        if self._ckpt is not None and \
+                self._last_snapshot_step < self._train_step:
+            self._write_snapshot(self._train_step)  # cover step-0 crashes
+        while True:
+            try:
+                self._driver_loop()
+            except ReplicaCrash as e:
+                if self._stop.is_set():
+                    return
+                if not cfg.supervise_trainer or self._ckpt is None or \
+                        self._trainer_restarts >= cfg.max_trainer_restarts:
+                    raise
+                self._recover_trainer(e)
+                continue
+            if self._ckpt is not None and self._error is None and \
+                    self._last_snapshot_step != self._train_step:
+                self._write_snapshot(self._train_step)  # clean shutdown
+            return
+
+    def _driver_loop(self) -> None:
         """The step-driving consumer: defines training steps, publishes
-        weights, records observed staleness."""
+        weights, records observed staleness. With a checkpointer attached
+        it consumes under leases (acked only once a snapshot covering the
+        step is durable) and drops rows already past the consumed
+        watermark — exactly-once training across restarts."""
         spec = self.driver_stage
         name = "train-0"
         cfg = self.cfg
@@ -742,7 +826,8 @@ class StageRunner:
         h_batch = self._h_batch.labels(stage=spec.name)
         c_samples = self._c_samples.labels(stage=spec.name)
         h_staleness = self._h_staleness.labels(stage=spec.name)
-        for step in range(cfg.num_steps):
+        use_lease = self._ckpt is not None
+        for step in range(self._train_step, cfg.num_steps):
             got = 0
             while got < cfg.samples_per_step and not self._stop.is_set():
                 want = (cfg.samples_per_step - got
@@ -751,12 +836,33 @@ class StageRunner:
                                  cfg.samples_per_step - got))
                 t0 = time.monotonic()
                 batch = self.tq.get(spec.name, want, consumer=name,
-                                    timeout=60.0)
+                                    timeout=60.0, lease=use_lease)
                 self.log.record(name, "wait", t0, time.monotonic())
                 if batch is None:
                     self._stop.set()
                     return
-                batch.pop("indices", None)
+                lease = batch.pop("lease", None)
+                idxs = batch.pop("indices", None) or []
+                if use_lease and idxs:
+                    # consumed-watermark duplicate guard: rows acked in a
+                    # durable snapshot must never train twice (the window
+                    # between snapshot write and lease ack requeues rows
+                    # that are already in the acked set)
+                    keep = [k for k, i in enumerate(idxs)
+                            if i not in self._acked_uids]
+                    if len(keep) < len(idxs):
+                        self._c_dup_dropped.inc(len(idxs) - len(keep))
+                        if not keep:
+                            self.tq.ack(spec.name, lease)
+                            continue
+                        idxs = [idxs[k] for k in keep]
+                        batch = {c: [v[k] for k in keep]
+                                 for c, v in batch.items()}
+                if lease is not None:
+                    # tracked before the update: a crash inside fn()
+                    # leaves the lease unacked, so recovery requeues
+                    # this batch along with the rest of the step
+                    self._step_leases.append((lease, list(idxs)))
                 versions = batch.get("version")
                 n = len(versions) if versions is not None \
                     else len(batch[spec.inputs[0]])
@@ -773,6 +879,8 @@ class StageRunner:
                     self.metrics.append({"step": step, **m})
                 got += n
                 self.samples_trained += n
+            if self._stop.is_set() and got < cfg.samples_per_step:
+                return
 
             # step complete -> publish new weights
             with self.log.span(name, "weight_sync", version=step + 1):
@@ -782,6 +890,111 @@ class StageRunner:
             with self._step_done:
                 self.trainer_version = step + 1
                 self._step_done.notify_all()
+            self._train_step = step + 1
+            if use_lease:
+                self._commit_pending.extend(self._step_leases)
+                del self._step_leases[:]
+                if cfg.checkpoint_interval_steps > 0 and \
+                        (step + 1) % cfg.checkpoint_interval_steps == 0:
+                    self._write_snapshot(step + 1)
+
+    # ------------------------------------------------------------------ #
+    # durable run snapshots & trainer recovery                            #
+    # ------------------------------------------------------------------ #
+
+    def _rollout_cursor(self, version: int) -> dict:
+        """Deterministic rollout-counter bases at a step boundary. Live
+        engine counters race with generation for *later* steps, so the
+        bases derive from the fixed per-step feed schedule instead: by
+        boundary V exactly V*prompts_per_step groups and
+        V*samples_per_step sequences are final."""
+        cfg = self.cfg
+        return {"gid": int(version) * cfg.prompts_per_step,
+                "cb_next_uid": int(version) * cfg.samples_per_step}
+
+    def _write_snapshot(self, version: int) -> None:
+        """Persist the run at a step boundary, then ack the leases the
+        snapshot covers (ack-on-snapshot: rows only pass the durable
+        consumed watermark once the snapshot naming them acked is on
+        disk — a crash in between requeues rows that are also in the
+        acked set, and the duplicate guard drops them; exactly-once
+        either way)."""
+        cfg = self.cfg
+        pending = list(self._commit_pending)
+        acked = set(self._acked_uids)
+        for _lease, idxs in pending:
+            acked.update(idxs)
+        run_state = {
+            "trainer_version": int(version),
+            "feed_step": int(version),
+            "samples_trained": min(self.samples_trained,
+                                   int(version) * cfg.samples_per_step),
+            "metrics": [dict(m) for m in self.metrics],
+            "staleness_seen": [int(s) for s in self.staleness_seen],
+            "aux_metrics": {k: [dict(m) for m in v]
+                            for k, v in self.aux_metrics.items()},
+            "acked_uids": sorted(acked),
+            "queue": self.tq.cursor(),
+            "rollout": self._rollout_cursor(version),
+            "trainer_restarts": self._trainer_restarts,
+        }
+        # every engine exposing a .state pytree is bundled (actor, critic);
+        # streaming aux engines are captured best-effort mid-stream
+        engine_states = {k: e.state for k, e in self.engines.items()
+                         if hasattr(e, "state")}
+        self._ckpt.save(int(version), run_state, engine_states)
+        self._last_snapshot_step = int(version)
+        for lease, idxs in pending:
+            self.tq.ack(self.driver_stage.name, lease)
+            self._acked_uids.update(idxs)
+        del self._commit_pending[:len(pending)]
+
+    def _recover_trainer(self, err) -> None:
+        """Warm-restart the train stage inside the live process: fence
+        the dead driver's partial work, requeue its unacked leases (front
+        of ready, original consumption order), and rewind the driver
+        engine + run accounting to the newest intact snapshot. Generate
+        replicas keep streaming throughout — the weight channel retains
+        any versions published past the snapshot, and the redone steps
+        recompute identical weights, so re-publishes are no-ops."""
+        spec = self.driver_stage
+        self._trainer_restarts += 1
+        self._trainer_epoch += 1
+        self._c_trainer_restarts.inc()
+        # fence: drop the dead driver's partial gradient accumulation so
+        # stale optimizer writes can never land on the restored state
+        del self._step_leases[:]
+        del self._commit_pending[:]
+        self.tq.requeue_consumer(spec.name, "train-0")
+        path = self._ckpt.resolve("auto")
+        if path is None:
+            raise RuntimeError(
+                f"trainer crashed ({err!r}) with no intact run snapshot "
+                f"in {self.cfg.checkpoint_dir!r}")
+        doc = self._ckpt.load(path)
+        step = int(doc["step"])
+        eng = self._driver_engine
+        if hasattr(eng, "state"):
+            eng.state, _ = self._ckpt.load_engine(
+                path, self.driver_stage.engine, eng.state)
+        for attr, val in (("_accum", None), ("_accum_n", 0),
+                          ("_accum_metrics", []), ("version", step)):
+            if hasattr(eng, attr):
+                setattr(eng, attr, val)
+        # rewind run accounting IN PLACE (WorkflowResult aliases these)
+        del self.metrics[:]
+        self.metrics.extend(dict(m) for m in doc.get("metrics", []))
+        del self.staleness_seen[:]
+        self.staleness_seen.extend(int(s)
+                                   for s in doc.get("staleness_seen", []))
+        self.samples_trained = int(doc.get(
+            "samples_trained", step * self.cfg.samples_per_step))
+        self._acked_uids = set(doc.get("acked_uids", []))
+        self._last_snapshot_step = step
+        with self._step_done:
+            self.trainer_version = step
+            self._train_step = step
+            self._step_done.notify_all()
 
     def _stream_train_worker(self, spec: StageSpec) -> None:
         """Accumulating consumer without step semantics (e.g. the critic):
@@ -819,7 +1032,9 @@ class StageRunner:
     def _feed_prompts(self) -> None:
         cfg = self.cfg
         ahead = cfg.staleness if cfg.mode == "async" else 0
-        for step in range(cfg.num_steps):
+        # a cold-resumed run re-primes generation from the dataset cursor:
+        # prompts below the snapshot step were trained and acked already
+        for step in range(self._feed_start, cfg.num_steps):
             with self._step_done:
                 while self.trainer_version < step - ahead and \
                         not self._stop.is_set():
@@ -942,6 +1157,15 @@ class StageRunner:
             if super_mon is not None:
                 super_mon.join(timeout=5.0)
         finally:
+            if self._ckpt is not None and self._error is not None and \
+                    self._last_snapshot_step != self._train_step:
+                # abnormal exit: flush one last snapshot at the newest
+                # completed boundary so a cold resume can pick up there
+                # (best-effort — never masks the original failure)
+                try:
+                    self._write_snapshot(self._train_step)
+                except Exception:                         # noqa: BLE001
+                    pass
             if sampler is not None:
                 sampler.stop()
         if self._error is not None:

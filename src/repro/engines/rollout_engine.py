@@ -79,6 +79,10 @@ class JaxRolloutEngine(RLAdapter):
         self._reward_groups: dict = {}   # staged path: gid -> (member, idx, r)
         self._glock = threading.Lock()
         self._gid = 0
+        # cold resume: a run snapshot's rollout cursor sets these bases so
+        # a resumed run continues the (cb_seed, uid, pos)-keyed sampling
+        # stream exactly where the uninterrupted run would be
+        self.cb_uid_start = 0
 
     def _new_gid(self) -> int:
         with self._glock:
@@ -139,7 +143,8 @@ class JaxRolloutEngine(RLAdapter):
                                 eng.max_len if eng else 0),
                     max_new_tokens=self.max_new_tokens,
                     temperature=self.temperature, seed=self.cb_seed,
-                    uid_start=0 if eng is None else eng._next_uid,
+                    uid_start=self.cb_uid_start if eng is None
+                    else eng._next_uid,
                     use_pallas=self.use_pallas, mesh=self.mesh)
             return self._cb
 

@@ -32,6 +32,14 @@ def main(argv=None):
                     choices=["fifo", "token_balance"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="durable run-snapshot directory (enables warm "
+                         "trainer recovery and --resume)")
+    ap.add_argument("--checkpoint-interval", type=int, default=1,
+                    help="snapshot every N steps (0 = start/end only)")
+    ap.add_argument("--resume", default=None,
+                    help='"auto" or a snapshot path: cold-resume a '
+                         "killed run from its newest intact snapshot")
     ap.add_argument("--gantt", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
@@ -44,8 +52,10 @@ def main(argv=None):
         rollout_workers=args.rollout_workers,
         max_new_tokens=args.max_new_tokens, staleness=args.staleness,
         staggered=args.staggered, policy=args.policy, lr=args.lr,
-        seed=args.seed, chunk_tokens=args.chunk_tokens)
-    result = Trainer(tcfg).fit()
+        seed=args.seed, chunk_tokens=args.chunk_tokens,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_interval_steps=args.checkpoint_interval)
+    result = Trainer(tcfg).fit(resume=args.resume)
 
     summary = {
         "mode": args.mode, "arch": args.arch,

@@ -1,11 +1,23 @@
 """Checkpointing — save/restore arbitrary pytrees (params, optimizer
 state) to an .npz + JSON treedef pair. Works for sharded arrays by
 gathering to host (fine for the CPU container; on a real cluster this is
-the per-host shard writer plug point)."""
+the per-host shard writer plug point).
+
+Saves are crash-atomic: both files are written into a temp directory,
+fsynced, and the directory is renamed into place in one step — a process
+killed mid-save can never leave a half-written checkpoint that
+:func:`restore_checkpoint` would load. When overwriting an existing
+checkpoint the old directory is moved aside first, so every observable
+state is either the complete old checkpoint, the complete new one, or
+(for the instant between the two renames) no checkpoint at all — never
+a torn mix of the two.
+"""
 from __future__ import annotations
 
 import json
 import os
+import shutil
+import uuid
 from typing import Any
 
 import jax
@@ -20,14 +32,47 @@ def _flatten_with_paths(tree):
     return keys, vals, treedef
 
 
+def fsync_path(path: str) -> None:
+    """fsync a file or directory so the rename that follows is durable."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass        # some filesystems refuse dir fsync; rename still atomic
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
-    os.makedirs(path, exist_ok=True)
+    path = os.path.normpath(path)
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
     keys, vals, _ = _flatten_with_paths(tree)
     arrays = {f"a{i}": np.asarray(v) for i, v in enumerate(vals)}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    meta = {"step": step, "keys": keys}
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f)
+    nonce = uuid.uuid4().hex[:8]
+    tmp = f"{path}.tmp-{os.getpid()}-{nonce}"
+    os.makedirs(tmp)
+    try:
+        npz = os.path.join(tmp, "arrays.npz")
+        np.savez(npz, **arrays)
+        fsync_path(npz)
+        meta_path = os.path.join(tmp, "meta.json")
+        with open(meta_path, "w") as f:
+            json.dump({"step": int(step), "keys": keys}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        fsync_path(tmp)
+        if os.path.isdir(path):
+            old = f"{path}.old-{os.getpid()}-{nonce}"
+            os.rename(path, old)
+            os.rename(tmp, path)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, path)
+        fsync_path(parent)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
 
 
 def restore_checkpoint(path: str, like: Any):
@@ -38,8 +83,22 @@ def restore_checkpoint(path: str, like: Any):
     keys_saved = meta["keys"]
     keys_like, vals_like, treedef = _flatten_with_paths(like)
     if keys_saved != keys_like:
-        raise ValueError("checkpoint structure mismatch: "
-                         f"{set(keys_saved) ^ set(keys_like)}")
+        step = meta.get("step")
+        extra = sorted(set(keys_saved) - set(keys_like))
+        missing = sorted(set(keys_like) - set(keys_saved))
+        if not extra and not missing:
+            pos, a, b = next(
+                (i, a, b) for i, (a, b)
+                in enumerate(zip(keys_saved, keys_like)) if a != b)
+            detail = (f"same keys, different treedef order — first "
+                      f"divergence at leaf {pos}: checkpoint has {a!r}, "
+                      f"target expects {b!r}")
+        else:
+            detail = (f"only in checkpoint: {extra}; "
+                      f"only in target: {missing}")
+        raise ValueError(
+            f"checkpoint structure mismatch (checkpoint saved at "
+            f"step {step}): {detail}")
     vals = [jax.numpy.asarray(data[f"a{i}"]).astype(v.dtype)
             for i, v in enumerate(vals_like)]
     return jax.tree_util.tree_unflatten(treedef, vals), meta["step"]

@@ -238,6 +238,70 @@ def test_unleased_get_unchanged():
     assert tq.controllers["gen"].outstanding_leases() == 0
 
 
+def test_double_ack_is_noop():
+    tq = _leased_queue()
+    b = tq.get("gen", 2, consumer="w0", lease=True)
+    tq.ack("gen", b["lease"])
+    tq.ack("gen", b["lease"])                    # second ack: silent no-op
+    assert tq.requeue("gen", b["lease"]) == 0    # acked lease never requeues
+    assert tq.controllers["gen"].outstanding_leases() == 0
+    assert tq.controllers["gen"].state_snapshot()["ready"] == 4
+
+
+def test_requeue_consumer_racing_ack_exactly_once():
+    """requeue_consumer (supervisor noticing a dead trainer) racing a
+    concurrent ack (the trainer's last snapshot commit): the lease is
+    popped atomically, so the rows are either finalized or requeued —
+    never both, never lost."""
+    for trial in range(25):
+        tq = _leased_queue()
+        b = tq.get("gen", 2, consumer="t0", lease=True)
+        n = {"requeued": None}
+
+        def _rq():
+            n["requeued"] = tq.requeue_consumer("gen", "t0")
+
+        threads = [threading.Thread(target=lambda: tq.ack("gen", b["lease"])),
+                   threading.Thread(target=_rq)]
+        if trial % 2:                            # alternate start order
+            threads.reverse()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        ready = tq.controllers["gen"].state_snapshot()["ready"]
+        # ack won -> rows stay consumed (4 ready); requeue won -> rows
+        # return to the front (6 ready). Exactly one of the two.
+        assert (n["requeued"], ready) in ((0, 4), (2, 6))
+        assert tq.controllers["gen"].outstanding_leases("t0") == 0
+
+
+def test_requeue_after_close_task_still_drains():
+    """A trainer crash after the feed closed the task: requeued rows must
+    still be fetchable (closed means no NEW rows, not dropped rows)."""
+    tq = _leased_queue()
+    b = tq.get("gen", 2, consumer="t0", lease=True)
+    tq.close_task("gen")
+    assert tq.requeue("gen", b["lease"]) == 2
+    got = tq.get("gen", 6, consumer="t1", allow_partial=True)
+    assert got["indices"] == [0, 1, 2, 3, 4, 5]  # front order, none lost
+    assert tq.get("gen", 2, consumer="t1", timeout=0.1) is None  # drained
+
+
+def test_requeue_consumer_multi_lease_restores_issue_order():
+    """A consumer holding several leases at once (the checkpointing
+    trainer acks only at snapshot boundaries) gets its rows back in the
+    original issue order: newest-first requeue composes with front
+    insertion so replayed training sees the identical schedule."""
+    tq = _leased_queue()
+    batches = [tq.get("gen", 2, consumer="t0", lease=True) for _ in range(3)]
+    assert [b["indices"] for b in batches] == [[0, 1], [2, 3], [4, 5]]
+    assert tq.requeue_consumer("gen", "t0") == 6
+    refetch = [tq.get("gen", 2, consumer="t0", lease=True)["indices"]
+               for _ in range(3)]
+    assert refetch == [[0, 1], [2, 3], [4, 5]]
+
+
 # ---------------------------------------------------------------------- #
 # one-to-many weight broadcast                                            #
 # ---------------------------------------------------------------------- #

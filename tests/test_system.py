@@ -101,7 +101,9 @@ def test_trainer_checkpoint_roundtrip(tmp_path):
                                rollout_workers=1, rollout_batch=2,
                                train_micro_batch=4, max_new_tokens=4,
                                seq_len=24))
-    step = t2.restore(ckpt)
+    # the run-snapshot machinery owns the checkpoint_dir root; the
+    # legacy single-state dump lands in "<dir>/final"
+    step = t2.restore(str(tmp_path / "rl_ckpt" / "final"))
     assert step == 1
     import jax
     for a, b in zip(jax.tree.leaves(t.train_engine.state.params),

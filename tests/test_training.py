@@ -69,6 +69,50 @@ def test_checkpoint_structure_mismatch(tmp_path):
         restore_checkpoint(str(tmp_path / "c"), {"b": jnp.zeros(2)})
 
 
+def test_checkpoint_torn_write_leaves_old_intact(tmp_path, monkeypatch):
+    """A save that dies mid-write (disk full / SIGKILL before the rename)
+    must leave the previous checkpoint untouched and no debris behind."""
+    path = str(tmp_path / "c")
+    save_checkpoint(path, {"a": jnp.arange(4.0)}, step=1)
+
+    def _boom(*args, **kwargs):
+        raise OSError("disk full mid-write")
+
+    monkeypatch.setattr(np, "savez", _boom)
+    with pytest.raises(OSError):
+        save_checkpoint(path, {"a": jnp.zeros(4)}, step=2)
+    monkeypatch.undo()
+    # the failed attempt cleaned its temp dir and never touched the target
+    assert os.listdir(tmp_path) == ["c"]
+    restored, step = restore_checkpoint(path, {"a": jnp.zeros(4)})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(4.0))
+
+
+def test_checkpoint_treedef_order_mismatch_names_leaf_and_step(tmp_path):
+    """Same leaf names in a different treedef order (a refactor reordered
+    NamedTuple fields) is the nastiest mismatch — silently loading would
+    swap arrays. The error must say so and name the saved step."""
+    from typing import Any, NamedTuple
+
+    class AB(NamedTuple):
+        a: Any
+        b: Any
+
+    class BA(NamedTuple):
+        b: Any
+        a: Any
+
+    save_checkpoint(str(tmp_path / "c"), AB(jnp.zeros(2), jnp.ones(3)),
+                    step=5)
+    with pytest.raises(ValueError) as ei:
+        restore_checkpoint(str(tmp_path / "c"), BA(jnp.ones(3), jnp.zeros(2)))
+    msg = str(ei.value)
+    assert "different treedef order" in msg
+    assert "saved at step 5" in msg
+
+
 # -- data -------------------------------------------------------------------
 
 @settings(max_examples=50, deadline=None)
